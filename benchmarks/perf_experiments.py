@@ -1,0 +1,62 @@
+"""§Perf hillclimb experiments: each entry is one hypothesis→change cycle
+run through the same dry-run machinery as the baseline table, written to
+benchmarks/artifacts/perf/<arch>__<shape>__single__<tag>.json.
+
+    PYTHONPATH=src python -m benchmarks.perf_experiments [--only TAG]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "artifacts", "perf")
+
+# (arch, shape, tag, cfg_overrides, microbatches)
+EXPERIMENTS = [
+    # --- cell 1: llama3-405b x train_4k (collective-dominant, OOM) -------
+    ("llama3-405b", "train_4k", "fusedproj",
+     {"fused_qkv": True, "fused_mlp": True}, 1),
+    ("llama3-405b", "train_4k", "fusedproj_mb4",
+     {"fused_qkv": True, "fused_mlp": True}, 4),
+    # --- cell 2: deepseek-v2 x prefill_32k (most collective-bound, 246GiB)
+    ("deepseek-v2-236b", "prefill_32k", "mlafused",
+     {"mla_fused_prefill": True}, 1),
+    ("deepseek-v2-236b", "prefill_32k", "mlafused_epmoe",
+     {"mla_fused_prefill": True, "moe_ep_serve": True}, 1),
+    ("deepseek-v2-236b", "decode_32k", "epmoe_blockscan",
+     {"moe_ep_serve": True, "decode_blockscan": True}, 1),
+    # --- cell 3: glm4-9b x decode_32k (paper-representative paged decode) -
+    ("glm4-9b", "decode_32k", "blockscan",
+     {"decode_blockscan": True}, 1),
+    ("glm4-9b", "decode_32k", "blockscan_seg",
+     {"decode_blockscan": True}, 1),  # placeholder for follow-ups
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    from repro.launch.dryrun import run_cell
+
+    for arch, shape, tag, overrides, mb in EXPERIMENTS:
+        if args.only and tag != args.only:
+            continue
+        fname = os.path.join(ARTIFACT_DIR,
+                             f"{arch}__{shape}__single__{tag}.json")
+        if os.path.exists(fname):
+            print(f"[cached] {tag}")
+            continue
+        rec = run_cell(arch, shape, "single", out_dir=ARTIFACT_DIR,
+                       cfg_overrides=overrides, microbatches=mb, tag=tag)
+        r = rec.get("roofline", {})
+        m = rec.get("memory_per_device", {})
+        print(f"[{rec['status']}] {tag}: mem={m.get('total_bytes', 0)/2**30:.2f}GiB "
+              f"terms=({r.get('compute_s', 0):.3g}, {r.get('memory_s', 0):.3g}, "
+              f"{r.get('collective_s', 0):.3g}) dom={r.get('dominant')}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir benchmarks/artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+from repro.models import model as M
+from repro.models.attention import kv_cache_dims
+from repro.roofline import hw
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def min_decode_bytes_per_chip(cfg, shape, chips):
+    """Mandatory HBM traffic for one decode step: read all live KV (or SSM
+    state) + read the active params once."""
+    from repro.launch.dryrun import count_params
+    total, active = count_params(cfg)
+    dt = 2  # bf16
+    b, s = shape.global_batch, shape.seq_len
+    kv = 0
+    n_attn = M.attn_layer_count(cfg)
+    if n_attn:
+        hkv, dk, dv = kv_cache_dims(cfg)
+        kv += n_attn * b * s * hkv * (dk + dv) * dt
+    if cfg.family in ("hybrid", "ssm"):
+        ss = cfg.ssm
+        if cfg.family == "hybrid":
+            n_state = M.hybrid_layout(cfg)[0]
+            kv += n_state * b * ss.num_heads * ss.state_dim * ss.head_dim * 4
+        else:
+            n_m, n_s, _ = M.xlstm_layout(cfg)
+            kv += n_m * b * ss.num_heads * ss.head_dim**2 * 4
+            kv += n_s * b * cfg.d_model * 4 * 4
+    return (kv + active * dt) / chips
+
+
+def load(art_dir):
+    cells = {}
+    for path in glob.glob(os.path.join(art_dir, "*.json")):
+        rec = json.load(open(path))
+        cells[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(cells) -> str:
+    rows = [
+        "| arch | shape | comp(s) | mem(s) | coll(s) | dominant | "
+        "mem/dev GiB | fits | useful_flops | MFU@bound | notes |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in ORDER_SHAPES:
+            rec = cells.get((arch, shape, "single"))
+            if rec is None:
+                rows.append(f"| {arch} | {shape} | — | — | — | — | — | — |"
+                            " — | — | (pending) |")
+                continue
+            if rec["status"] == "skip":
+                rows.append(f"| {arch} | {shape} | — | — | — | — | — | — |"
+                            f" — | — | {rec['reason']} |")
+                continue
+            r = rec.get("roofline")
+            m = rec["memory_per_device"]
+            if not r:
+                rows.append(
+                    f"| {arch} | {shape} | ? | ? | ? | ? |"
+                    f" {fmt_bytes(m['total_bytes'])} | {m['fits']} | ? | ? "
+                    "| no roofline |")
+                continue
+            bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            mfu = (r["model_flops_per_device"] / hw.PEAK_FLOPS_BF16) / bound
+            note = "loop-corrected" if r.get("corrected") else ""
+            rows.append(
+                f"| {arch} | {shape} | {r['compute_s']:.3g} |"
+                f" {r['memory_s']:.3g} | {r['collective_s']:.3g} |"
+                f" {r['dominant'].replace('_s', '')} |"
+                f" {fmt_bytes(m['total_bytes'])} | {m['fits']} |"
+                f" {r['useful_flops_ratio']:.2f} | {mfu:.3f} | {note} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells) -> str:
+    rows = [
+        "| arch | shape | single-pod (256) | multi-pod (512) |",
+        "|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in ORDER_SHAPES:
+            def cell_str(mesh):
+                rec = cells.get((arch, shape, mesh))
+                if rec is None:
+                    return "pending"
+                if rec["status"] == "skip":
+                    return "SKIP"
+                m = rec["memory_per_device"]
+                return (f"ok, {fmt_bytes(m['total_bytes'])} GiB/dev"
+                        f"{'' if m['fits'] else ' (OVER 16G)'}")
+            rows.append(f"| {arch} | {shape} | {cell_str('single')} |"
+                        f" {cell_str('multi')} |")
+    return "\n".join(rows)
+
+
+def interesting_cells(cells):
+    """Pick hillclimb candidates: worst MFU@bound, most collective-bound."""
+    scored = []
+    for (arch, shape, mesh), rec in cells.items():
+        if mesh != "single" or rec.get("status") != "ok":
+            continue
+        r = rec.get("roofline")
+        if not r:
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        mfu = (r["model_flops_per_device"] / hw.PEAK_FLOPS_BF16) / bound
+        scored.append({
+            "cell": (arch, shape), "mfu": mfu, "dominant": r["dominant"],
+            "coll_frac": r["collective_s"] / bound,
+        })
+    worst = sorted(scored, key=lambda x: x["mfu"])[:5]
+    collbound = sorted(scored, key=lambda x: -x["coll_frac"])[:5]
+    return worst, collbound
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "artifacts", "dryrun"))
+    args = ap.parse_args()
+    cells = load(args.dir)
+    print("## Dry-run matrix\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single-pod, per device, per step)\n")
+    print(roofline_table(cells))
+    worst, coll = interesting_cells(cells)
+    print("\n### hillclimb candidates (worst MFU@bound)")
+    for w in worst:
+        print(f"- {w['cell']} mfu={w['mfu']:.4f} dom={w['dominant']}")
+    print("\n### most collective-bound")
+    for w in coll:
+        print(f"- {w['cell']} coll_frac={w['coll_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

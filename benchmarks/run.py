@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Emits `name,value,derived` CSV lines (value is µs for latency rows).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import autotune_bench, e2e_latency, kernel_variants, \
+        tile_sizes
+    suites = {
+        "kernel_variants": kernel_variants,  # Fig 6
+        "tile_sizes": tile_sizes,  # Fig 7
+        "autotune": autotune_bench,  # Fig 8
+        "e2e_latency": e2e_latency,  # Fig 9
+    }
+    print("name,value,derived")
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.4f},{derived}")
+        sys.stdout.flush()
+
+    failed = []
+    for name, mod in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run(emit)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

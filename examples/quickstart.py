@@ -1,0 +1,50 @@
+"""Quickstart: build a small model, train it on the synthetic Markov stream,
+then serve it with the paged-attention engine — all on CPU in ~a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.request import make_requests
+from repro.training.data import DataState, MarkovDataset
+from repro.training.trainer import make_train_state, make_train_step
+
+
+def main():
+    cfg = reduced(ARCHS["smollm-135m"]).replace(num_layers=2)
+    print(f"arch={cfg.name} d_model={cfg.d_model} layers={cfg.num_layers} "
+          f"vocab={cfg.vocab_size}")
+
+    # --- train ---------------------------------------------------------
+    state = make_train_state(cfg, jax.random.key(0))
+    step = make_train_step(cfg, base_lr=1e-2, warmup=5, total_steps=40)
+    ds = MarkovDataset(cfg.vocab_size, seed=1)
+    dstate = DataState(seed=1)
+    for i in range(40):
+        batch, dstate = ds.batch(dstate, batch_size=8, seq_len=64)
+        state, metrics = step(state, {k: jnp.asarray(v)
+                                      for k, v in batch.items()})
+        if i % 10 == 0 or i == 39:
+            print(f"step {i:3d} loss {float(metrics['loss']):.3f} "
+                  f"(markov entropy {ds.entropy:.2f})")
+
+    # --- serve (continuous batching over the paged KV cache) ------------
+    eng = Engine(cfg, state["params"], max_seqs=4, num_pages=64,
+                 max_model_len=256)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (12, 30, 7)]
+    reqs = make_requests(prompts, max_new_tokens=16)
+    eng.generate(reqs)
+    for r in reqs:
+        print(f"req {r.req_id}: prompt[{len(r.prompt)}] -> {r.output}")
+    print(f"compiled executables (graph captures): {eng.compile_events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""repro — a JAX/Pallas TPU reproduction of "The Anatomy of a Triton
+Attention Kernel" (Ringlein et al., 2025): a production-grade paged-attention
+serving + training framework.
+
+Layers (bottom-up):
+  kernels/      Pallas TPU kernels (paged attention variants, flash attention,
+                mamba2 SSD, mLSTM) with pure-jnp oracles.
+  core/         paged-KV runtime: page allocator, block tables, attention
+                backend dispatch + metadata + heuristics.
+  models/       composable decoder architectures (dense/GQA/MLA/MoE/SSM).
+  configs/      the 10 assigned architecture configs (+ reduced smoke forms).
+  serving/      continuous-batching inference engine (vLLM-v1 analog).
+  training/     optimizer, train step, data pipeline, checkpointing.
+  distributed/  mesh + sharding rules + collectives (DP/TP/EP/FSDP/pod).
+  autotune/     offline microbenchmark tuning -> decision-tree heuristics.
+  launch/       mesh.py / dryrun.py / train.py / serve.py entry points.
+  roofline/     compiled-artifact roofline analysis (3-term model).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,137 @@
+"""Analytic timing model of the paged-attention kernel variants on TPU v5e.
+
+On real TPU hardware the microbenchmark suite (microbench.py) times the
+actual Pallas kernels; on this CPU host it evaluates this model instead —
+the model is derived from the kernels' exact tile geometry (grid cells, DMA
+bytes per BlockSpec fetch, MXU row occupancy) and the same hardware
+constants as the roofline, so the exported decision trees have the same
+*structure* the paper's Listing 2 has (variant + tile + segments as a
+function of batch/context/decode-share).
+
+Captured effects (paper §4.3-4.7):
+  * C1 baseline re-fetches each KV page once per *query* head: GQA models
+    pay a group-factor of extra DMA (the paper's 'order of magnitude').
+  * C1's (1 x D) MXU rows waste the systolic array: row occupancy M/256.
+  * C3 segmentation multiplies grid cells: small-batch decode can't fill
+    the pipeline without it (utilization ramp), but pays a reduction kernel
+    launch + segment-accumulator traffic.
+  * smaller tiles raise per-step overhead; larger tiles raise VMEM
+    footprint (invalid past the budget).
+  * every launched kernel pays a fixed dispatch overhead (the paper's
+    launch-overhead analysis, §6.2 — ~10 us for a compiled XLA executable
+    vs Triton's 100-300 us JIT-path overhead).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline import hw
+
+LAUNCH_OVERHEAD_S = 10e-6  # per kernel dispatch (compiled executable)
+GRID_STEP_OVERHEAD_S = 0.15e-6  # per grid-cell pipeline step
+PIPELINE_FILL_CELLS = 16  # cells needed to hide DMA latency (ramp)
+VMEM_BUDGET = 96 * 1024  # bytes usable for one KV tile double-buffer pair
+MXU_ROWS = 256  # effective row pipeline depth for occupancy scaling
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One microbenchmark point (mirrors paper §7.1: variable-length
+    batches, decode share)."""
+    num_seqs: int
+    context_lens: tuple[int, ...]  # one per seq
+    query_lens: tuple[int, ...]  # 1 = decode
+    num_q_heads: int
+    num_kv_heads: int
+    head_dim: int
+    page_size: int
+    dtype_bytes: int = 2
+
+    @property
+    def group(self) -> int:
+        return self.num_q_heads // self.num_kv_heads
+
+    @property
+    def decode_share(self) -> float:
+        d = sum(1 for q in self.query_lens if q == 1)
+        return d / max(len(self.query_lens), 1)
+
+    @property
+    def max_context(self) -> int:
+        return max(self.context_lens) if self.context_lens else 0
+
+    @property
+    def avg_query_len(self) -> float:
+        return sum(self.query_lens) / max(len(self.query_lens), 1)
+
+
+def _mxu_time(flops: float, rows: int) -> float:
+    occupancy = min(rows, MXU_ROWS) / MXU_ROWS
+    return flops / (hw.PEAK_FLOPS_BF16 * max(occupancy, 1 / MXU_ROWS))
+
+
+def _mem_time(bytes_: float, cells: int) -> float:
+    util = min(1.0, cells / PIPELINE_FILL_CELLS)
+    return bytes_ / (hw.HBM_BW * max(util, 1 / PIPELINE_FILL_CELLS))
+
+
+def decode_time(s: Scenario, *, variant: str, tile: int,
+                num_segments: int = 8) -> float:
+    """Predicted latency of one decode attention launch."""
+    kv_row = s.head_dim * s.dtype_bytes * 2  # k + v
+    if tile > s.page_size or s.page_size % tile or \
+            2 * 2 * tile * s.head_dim * s.dtype_bytes > VMEM_BUDGET:
+        return float("inf")
+    total_ctx = sum(c for c, q in zip(s.context_lens, s.query_lens))
+    if variant == "baseline":
+        # each q head re-streams its KV head's pages (C1)
+        bytes_ = total_ctx * kv_row * s.num_q_heads
+        cells = s.num_seqs * s.num_q_heads
+        rows = 1
+        segments = 1
+    elif variant == "gqa":
+        bytes_ = total_ctx * kv_row * s.num_kv_heads
+        cells = s.num_seqs * s.num_kv_heads
+        rows = s.group
+        segments = 1
+    elif variant == "segmented":
+        bytes_ = total_ctx * kv_row * s.num_kv_heads
+        cells = s.num_seqs * s.num_kv_heads * num_segments
+        rows = s.group
+        segments = num_segments
+    else:
+        raise ValueError(variant)
+    flops = 4.0 * total_ctx * s.num_q_heads * s.head_dim
+    steps = cells * max(s.max_context // tile, 1) / max(segments, 1)
+    t = max(_mxu_time(flops, rows), _mem_time(bytes_, cells))
+    t += steps * GRID_STEP_OVERHEAD_S / max(cells, 1)
+    t += LAUNCH_OVERHEAD_S
+    if variant == "segmented":
+        # reduction kernel: second launch + segment accumulator traffic
+        seg_bytes = (s.num_seqs * s.num_kv_heads * num_segments
+                     * s.group * (s.head_dim + 2) * 4) * 2
+        t += LAUNCH_OVERHEAD_S + seg_bytes / hw.HBM_BW
+    return t
+
+
+def prefill_time(s: Scenario, *, block_q: int, tile: int) -> float:
+    """Predicted latency of one Q-Block prefill launch (C2)."""
+    if tile > s.page_size or s.page_size % tile or \
+            2 * 2 * tile * s.head_dim * s.dtype_bytes > VMEM_BUDGET:
+        return float("inf")
+    kv_row = s.head_dim * s.dtype_bytes * 2
+    rows = block_q * s.group
+    flops = bytes_ = 0.0
+    cells = 0
+    for ctx, q in zip(s.context_lens, s.query_lens):
+        nqb = -(-q // block_q)
+        cells += nqb * s.num_kv_heads
+        # each q block streams pages up to its last attended position
+        avg_span = ctx - q / 2
+        bytes_ += nqb * avg_span * kv_row * s.num_kv_heads
+        flops += 4.0 * q * avg_span * s.num_q_heads * s.head_dim
+    steps = cells * max(s.max_context // tile, 1)
+    t = max(_mxu_time(flops, rows), _mem_time(bytes_, cells))
+    t += steps * GRID_STEP_OVERHEAD_S / max(cells, 1)
+    # q-block padding waste: ragged tails recompute dead rows
+    return t + LAUNCH_OVERHEAD_S

@@ -1,0 +1,129 @@
+"""Microbenchmark framework (paper §5.2, Fig. 5 left half).
+
+Runs OUTSIDE the serving runtime: generates realistic request mixes
+(variable context/query lengths, decode shares — §7.1) and measures each
+kernel configuration. On TPU it times the real Pallas kernels; on a CPU
+host it evaluates the analytic cost model (costmodel.py) so the tuning
+WORKFLOW — sweep, compare, export heuristics — is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import numpy as np
+
+from repro.autotune.costmodel import Scenario, decode_time, prefill_time
+from repro.core.attention.heuristics import KernelConfig
+
+
+def scenario_grid(*, num_q_heads=32, num_kv_heads=8, head_dim=128,
+                  page_size=16, seed=0) -> list[Scenario]:
+    """The paper's Llama3-8B-flavored sweep: batch sizes x max sequence
+    lengths x decode shares, with per-request length jitter."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for bs, max_len, dshare in itertools.product(
+        (1, 4, 16, 64, 128), (128, 1024, 8192, 32768), (0.0, 0.5, 1.0)
+    ):
+        ctx = rng.integers(max(max_len // 4, 16), max_len + 1, size=bs)
+        n_dec = int(round(bs * dshare))
+        qlens = np.ones(bs, np.int64)
+        if bs - n_dec:
+            qlens[n_dec:] = np.minimum(
+                ctx[n_dec:], rng.integers(64, 2048, size=bs - n_dec)
+            )
+        out.append(Scenario(
+            num_seqs=bs, context_lens=tuple(int(c) for c in ctx),
+            query_lens=tuple(int(q) for q in qlens),
+            num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
+            head_dim=head_dim, page_size=page_size,
+        ))
+    return out
+
+
+DECODE_SPACE: list[KernelConfig] = [
+    KernelConfig("baseline"),
+    *[KernelConfig("gqa", tile=t) for t in (8, 16)],
+    *[KernelConfig("segmented", tile=t, num_segments=s)
+      for t in (8, 16) for s in (2, 4, 8, 16)],
+]
+
+PREFILL_SPACE: list[KernelConfig] = [
+    KernelConfig("gqa", tile=t, block_q=bq)
+    for t in (8, 16) for bq in (8, 16, 32, 64)
+]
+
+
+def measure(scenario: Scenario, cfg: KernelConfig, *,
+            use_hardware: bool = False) -> float:
+    """Latency (s) of this config on this scenario."""
+    if use_hardware:  # pragma: no cover - TPU-only path
+        return _measure_on_device(scenario, cfg)
+    if scenario.decode_share == 1.0:
+        return decode_time(
+            scenario, variant=cfg.variant,
+            tile=cfg.tile or scenario.page_size,
+            num_segments=cfg.num_segments,
+        )
+    return prefill_time(
+        scenario, block_q=cfg.block_q, tile=cfg.tile or scenario.page_size,
+    ) + (decode_time(
+        scenario, variant=cfg.variant, tile=cfg.tile or scenario.page_size,
+        num_segments=cfg.num_segments) if scenario.decode_share > 0 else 0.0)
+
+
+def _measure_on_device(scenario: Scenario, cfg: KernelConfig,
+                       warmup: int = 20, iters: int = 100) -> float:
+    """Wall-clock timing of the real kernels (paper §7.1 methodology:
+    20 warmup + mean of 100)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import ops
+
+    s = scenario
+    np_ = -(-s.max_context // s.page_size)
+    p = s.num_seqs * np_ + 1
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (s.num_seqs, s.num_q_heads, s.head_dim),
+                          jnp.bfloat16)
+    kp = jax.random.normal(key, (s.num_kv_heads, p, s.page_size, s.head_dim),
+                           jnp.bfloat16)
+    vp = kp
+    pt = jnp.arange(1, 1 + s.num_seqs * np_,
+                    dtype=jnp.int32).reshape(s.num_seqs, np_)
+    ctx = jnp.asarray(s.context_lens, jnp.int32)
+
+    def run():
+        return ops.paged_attention_decode(
+            q, kp, vp, pt, ctx, variant=cfg.variant, tile=cfg.tile,
+            num_segments=cfg.num_segments)
+
+    for _ in range(warmup):
+        run().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        run().block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+@dataclasses.dataclass
+class SweepResult:
+    scenario: Scenario
+    timings: dict[int, float]  # config index -> seconds
+
+    def best(self, space) -> KernelConfig:
+        idx = min(self.timings, key=self.timings.get)
+        return space[idx]
+
+
+def sweep(scenarios, space, *, use_hardware=False) -> list[SweepResult]:
+    out = []
+    for sc in scenarios:
+        timings = {
+            i: measure(sc, cfg, use_hardware=use_hardware)
+            for i, cfg in enumerate(space)
+        }
+        out.append(SweepResult(sc, timings))
+    return out

@@ -1,0 +1,146 @@
+"""Autotuning-results -> decision-tree export (paper §5.2, Fig. 5 right
+half; Listing 2).
+
+The tree is fit by greedy regret minimization: at each node try every
+(feature, threshold) split and keep the one that most reduces total latency
+regret vs the per-scenario oracle; leaves emit the regret-minimizing
+KernelConfig. Exported as (a) the heuristics JSON consumed by
+`repro.core.attention.heuristics.load`, and (b) a Listing-2-style Python
+snippet for human review.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.autotune.microbench import (
+    DECODE_SPACE, SweepResult, scenario_grid, sweep,
+)
+
+FEATURES = ("num_seqs", "max_context", "group", "decode_share")
+
+
+def _feat(sr: SweepResult, name: str):
+    return getattr(sr.scenario, name)
+
+
+def _best_single(results: list[SweepResult], space) -> tuple[int, float]:
+    """(config idx, total regret) of the best single config for a subset."""
+    best_idx, best_cost = 0, float("inf")
+    for i in range(len(space)):
+        cost = sum(sr.timings[i] for sr in results)
+        if cost < best_cost:
+            best_idx, best_cost = i, cost
+    oracle = sum(min(sr.timings.values()) for sr in results)
+    return best_idx, best_cost - oracle
+
+
+@dataclasses.dataclass
+class Node:
+    config_idx: int | None = None
+    feature: str | None = None
+    threshold: float | None = None
+    le: "Node | None" = None
+    gt: "Node | None" = None
+
+
+def fit_tree(results: list[SweepResult], space, *, max_depth: int = 3,
+             min_leaf: int = 3) -> Node:
+    idx, regret = _best_single(results, space)
+    if max_depth == 0 or regret <= 0 or len(results) < 2 * min_leaf:
+        return Node(config_idx=idx)
+    best = None  # (regret_sum, feature, threshold, lo, hi)
+    for feat in FEATURES:
+        values = sorted({_feat(r, feat) for r in results})
+        for thr in values[:-1]:
+            lo = [r for r in results if _feat(r, feat) <= thr]
+            hi = [r for r in results if _feat(r, feat) > thr]
+            if len(lo) < min_leaf or len(hi) < min_leaf:
+                continue
+            _, rl = _best_single(lo, space)
+            _, rh = _best_single(hi, space)
+            if best is None or rl + rh < best[0]:
+                best = (rl + rh, feat, thr, lo, hi)
+    if best is None or best[0] >= regret:
+        return Node(config_idx=idx)
+    _, feat, thr, lo, hi = best
+    return Node(
+        feature=feat, threshold=thr,
+        le=fit_tree(lo, space, max_depth=max_depth - 1, min_leaf=min_leaf),
+        gt=fit_tree(hi, space, max_depth=max_depth - 1, min_leaf=min_leaf),
+    )
+
+
+def flatten(node: Node, space, cond=None) -> list[tuple[dict, dict]]:
+    """Tree -> first-match (condition, config) list for heuristics.load."""
+    cond = cond or {}
+    if node.config_idx is not None:
+        cfg = space[node.config_idx]
+        return [(cond, {
+            "variant": cfg.variant, "tile": cfg.tile,
+            "num_segments": cfg.num_segments, "block_q": cfg.block_q,
+        })]
+    out = flatten(node.le, space,
+                  {**cond, f"{node.feature}_le": node.threshold})
+    out += flatten(node.gt, space,
+                   {**cond, f"{node.feature}_ge": node.threshold + 1e-9})
+    return out
+
+
+def to_listing(node: Node, space, indent=0) -> str:
+    """Human-readable Listing-2-style rendering."""
+    pad = "    " * indent
+    if node.config_idx is not None:
+        c = space[node.config_idx]
+        return (f"{pad}return KernelConfig({c.variant!r}, tile={c.tile},"
+                f" num_segments={c.num_segments}, block_q={c.block_q})\n")
+    s = f"{pad}if {node.feature} <= {node.threshold}:\n"
+    s += to_listing(node.le, space, indent + 1)
+    s += f"{pad}else:\n"
+    s += to_listing(node.gt, space, indent + 1)
+    return s
+
+
+def regret_report(results, space, tree: Node) -> dict:
+    """Tuned-vs-untuned summary (the paper's Fig. 8 quantities)."""
+    def tree_cfg_idx(sr):
+        node = tree
+        while node.config_idx is None:
+            node = node.le if _feat(sr, node.feature) <= node.threshold \
+                else node.gt
+        return node.config_idx
+
+    oracle = sum(min(sr.timings.values()) for sr in results)
+    tuned = sum(sr.timings[tree_cfg_idx(sr)] for sr in results)
+    default_idx, _ = _best_single(results, space)
+    untuned = sum(sr.timings[default_idx] for sr in results)
+    worst_speedup = max(
+        sr.timings[default_idx] / sr.timings[tree_cfg_idx(sr)]
+        for sr in results
+    )
+    return {
+        "oracle_s": oracle, "tuned_s": tuned, "untuned_best_fixed_s": untuned,
+        "tuned_vs_untuned_speedup": untuned / tuned,
+        "tuned_vs_oracle_overhead": tuned / oracle - 1.0,
+        "max_pointwise_speedup": worst_speedup,
+    }
+
+
+def tune_and_export(path_json: str, path_listing: str | None = None, *,
+                    use_hardware: bool = False, seed: int = 0,
+                    **arch_kw) -> dict:
+    scenarios = [s for s in scenario_grid(seed=seed, **arch_kw)
+                 if s.decode_share == 1.0]
+    results = sweep(scenarios, DECODE_SPACE, use_hardware=use_hardware)
+    tree = fit_tree(results, DECODE_SPACE)
+    payload = {"decode_tree": flatten(tree, DECODE_SPACE)}
+    with open(path_json, "w") as f:
+        json.dump(payload, f, indent=1)
+    listing = to_listing(tree, DECODE_SPACE)
+    if path_listing:
+        with open(path_listing, "w") as f:
+            f.write("# auto-generated decision tree (paper Listing 2 analog)\n")
+            f.write(listing)
+    report = regret_report(results, DECODE_SPACE, tree)
+    report["listing"] = listing
+    return report

@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    SSMConfig,
+    input_specs,
+    shape_applies,
+)
+from repro.configs.registry import ARCHS, get_config, reduced  # noqa: F401

@@ -1,0 +1,176 @@
+"""Architecture config schema + the assigned input-shape suite.
+
+Every assigned architecture is a `ModelConfig`; `reduced()` produces the
+family-preserving smoke-test variant (small layers/width/experts/vocab).
+`input_specs(cfg, shape)` builds ShapeDtypeStruct stand-ins for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Family = Literal["dense", "moe", "hybrid", "ssm", "audio", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 1
+    num_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_layer_period: int = 1  # every Nth layer is MoE (llama4 uses 1 here)
+    first_k_dense: int = 0  # leading dense-FFN layers (DeepSeek-V2 uses 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (hybrid) / xLSTM block parameters."""
+    state_dim: int = 0  # N
+    num_heads: int = 0
+    head_dim: int = 0  # P
+    num_groups: int = 1  # B/C groups
+    conv_kernel: int = 4
+    expand: int = 2  # d_inner = expand * d_model
+    chunk: int = 128
+    # hybrid (zamba2): every `shared_attn_period`-th block is the shared
+    # global attention block
+    shared_attn_period: int = 0
+    # xlstm: one sLSTM per `slstm_period` blocks (rest mLSTM)
+    slstm_period: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_q_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_q_heads
+    qkv_bias: bool = False
+    rope_style: Literal["rope", "mrope", "none"] = "rope"
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, ...] = (16, 24, 24)
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    input_kind: Literal["tokens", "embeds"] = "tokens"
+    dtype: str = "bfloat16"
+    page_size: int = 16
+    moe: MoEConfig = dataclasses.field(default_factory=MoEConfig)
+    mla: MLAConfig = dataclasses.field(default_factory=MLAConfig)
+    ssm: SSMConfig = dataclasses.field(default_factory=SSMConfig)
+    # which serve shapes apply ("long_500k" listed only for sub-quadratic)
+    supports_long_context: bool = False
+    source: str = ""
+    # --- beyond-paper optimization knobs (§Perf; defaults = baseline) ----
+    fused_qkv: bool = False  # single QKV matmul: 1 activation gather/block
+    fused_mlp: bool = False  # fused gate|up matmul
+    mla_fused_prefill: bool = False  # expand MLA K/V per KV-block in-scan
+    decode_blockscan: bool = False  # page-block-scan decode (no dense copy)
+    moe_ep_serve: bool = False  # shard_map expert-parallel dropless MoE
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_q_heads
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applies(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(applies?, reason-if-not). long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "SKIP(long_500k: pure full-attention arch)"
+    return True, ""
+
+
+def positions_spec(cfg: ModelConfig, b: int, s: int):
+    if cfg.rope_style == "mrope":
+        return jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                pages_per_seq: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   tokens/embeds + labels (targets)
+    prefill: tokens/embeds + positions + paged metadata
+    decode:  1 new token per seq + paged metadata (KV cache passed alongside
+             via cache_specs(), not here)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        if cfg.input_kind == "embeds":
+            x = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.param_dtype)
+        else:
+            x = jax.ShapeDtypeStruct((b, s), tok)
+        return {
+            "inputs": x,
+            "labels": jax.ShapeDtypeStruct((b, s), tok),
+            "positions": positions_spec(cfg, b, s),
+        }
+    np_ = pages_per_seq or -(-s // cfg.page_size)
+    meta = {
+        "page_table": jax.ShapeDtypeStruct((b, np_), tok),
+        "context_lens": jax.ShapeDtypeStruct((b,), tok),
+    }
+    if shape.kind == "prefill":
+        if cfg.input_kind == "embeds":
+            x = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.param_dtype)
+        else:
+            x = jax.ShapeDtypeStruct((b, s), tok)
+        return {
+            "inputs": x,
+            "positions": positions_spec(cfg, b, s),
+            "query_lens": jax.ShapeDtypeStruct((b,), tok),
+            **meta,
+        }
+    # decode: single new token; embeds-frontend archs still decode token ids
+    if cfg.rope_style == "mrope":
+        pos = jax.ShapeDtypeStruct((3, b, 1), tok)
+    else:
+        pos = jax.ShapeDtypeStruct((b, 1), tok)
+    return {
+        "inputs": jax.ShapeDtypeStruct((b, 1), tok),
+        "positions": pos,
+        **meta,
+    }

@@ -1,0 +1,5 @@
+"""Assigned-architecture config (see registry.py for the definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["qwen2-vl-2b"]
+

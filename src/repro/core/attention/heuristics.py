@@ -1,0 +1,98 @@
+"""Kernel-config heuristics — the paper's §5 'autotuning exported as simple
+if/else decision trees' (Listing 2), adapted to the TPU tuning surface:
+kernel variant (C1/C2/C3), KV tile size (C4), and segment count (C3).
+
+The default tree below mirrors the paper's shipped heuristic structure; the
+autotune subsystem (repro.autotune) regenerates it from microbenchmark sweeps
+and `load()` swaps it in. Decisions happen at *dispatch* time on host-side
+batch metadata — never inside the compiled graph — which is exactly what
+keeps them compatible with the static-shape (CUDA-graph-analog) executables
+(paper §6.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    variant: str  # 'baseline' | 'gqa' | 'segmented'
+    tile: int | None = None  # None -> ops.default_tile(page_size)
+    num_segments: int = 8
+    block_q: int = 16  # prefill Q-block tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchProfile:
+    """Host-side batch metadata the tree branches on (paper §6.1)."""
+    num_seqs: int
+    max_context: int
+    group: int  # q heads per kv head
+    page_size: int
+    decode_share: float = 1.0  # fraction of decode requests in the batch
+    avg_query_len: int = 1
+
+
+_TREE: list[tuple[dict, KernelConfig]] | None = None
+
+
+def default_decode_config(p: BatchProfile) -> KernelConfig:
+    """Default decision tree (pre-autotune). Structure follows paper §4.5:
+    segmented (parallel tiled softmax) only for small batches of long
+    sequences; otherwise the GQA Q-Block kernel; tiles sized to the page."""
+    if p.num_seqs * p.group >= 64 or p.max_context <= 2 * p.page_size:
+        return KernelConfig("gqa")
+    # small batch, long context -> extract parallelism across segments
+    segs = max(2, min(16, p.max_context // (8 * p.page_size)))
+    return KernelConfig("segmented", num_segments=segs)
+
+
+def default_prefill_config(p: BatchProfile) -> KernelConfig:
+    # paper Listing 2: bigger Q blocks for long prompts
+    bq = 32 if p.avg_query_len >= 4096 else 16
+    return KernelConfig("gqa", block_q=bq)
+
+
+def _match(cond: dict, p: BatchProfile) -> bool:
+    ok = True
+    for key, bound in cond.items():
+        field, op = key.rsplit("_", 1)
+        val = getattr(p, field)
+        ok &= val <= bound if op == "le" else val >= bound
+    return ok
+
+
+def decode_config(p: BatchProfile) -> KernelConfig:
+    if _TREE is not None:
+        for cond, cfg in _TREE:
+            if _match(cond, p):
+                return cfg
+    return default_decode_config(p)
+
+
+def prefill_config(p: BatchProfile) -> KernelConfig:
+    return default_prefill_config(p)
+
+
+def load(path: str) -> None:
+    """Install an autotune-exported decision tree (JSON list of
+    [condition, kernel_config] pairs, first match wins)."""
+    global _TREE
+    with open(path) as f:
+        raw = json.load(f)
+    _TREE = [
+        (cond, KernelConfig(**cfg)) for cond, cfg in raw["decode_tree"]
+    ]
+
+
+def reset() -> None:
+    global _TREE
+    _TREE = None
+
+
+def maybe_load_env() -> None:
+    path = os.environ.get("REPRO_ATTN_HEURISTICS", "")
+    if path and os.path.exists(path):
+        load(path)

@@ -1,0 +1,49 @@
+"""Host-side KV page allocator (the vLLM block-manager analog).
+
+Page 0 is the NULL page — never allocated, used as the target of padded
+block-table entries so every lowered program stays fully static (paper C5).
+Pure numpy/python: allocation decisions are host-side scheduler work and
+never enter the compiled graphs (paper §6.1 metadata discipline).
+"""
+from __future__ import annotations
+
+
+class OutOfPages(Exception):
+    pass
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = list(range(num_pages - 1, 0, -1))  # LIFO; page 0 = NULL
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def allocate(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"need {n}, have {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            assert 0 < p < self.num_pages, p
+            assert p not in self._free[-8:], f"double free of page {p}"
+            self._free.append(p)
+
+    def check_invariants(self, allocated: list[list[int]]) -> None:
+        """Test hook: free + allocated must partition [1, num_pages)."""
+        flat = [p for group in allocated for p in group]
+        assert len(set(flat)) == len(flat), "page double-booked"
+        assert set(flat).isdisjoint(self._free), "allocated page in free list"
+        assert len(flat) + len(self._free) == self.num_pages - 1

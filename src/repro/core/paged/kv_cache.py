@@ -1,0 +1,80 @@
+"""Paged KV cache pytrees + page read/write primitives.
+
+Layout (stacked across attention layers, leading dim L):
+  k_pages/v_pages : [L, Hkv, num_pools, pages_per_pool, page_size, D]
+  page_table      : [S, pages_per_seq] int32, POOL-LOCAL page ids
+  pool of seq s   : s // (S // num_pools)
+
+`num_pools` is the data-parallel degree: each DP shard owns one page pool
+and the sequences resident on it — pages are pooled (true PagedAttention
+sharing) *within* a shard, and every gather/scatter below is batched over
+the pool axis, so GSPMD keeps all page traffic shard-local (no cross-chip
+page gathers). A single host (the serving engine on CPU, or any one chip)
+is simply num_pools=1.
+
+Page 0 of every pool is the NULL page: never allocated, target of padded
+block-table entries — what keeps every lowered program fully static
+(paper C5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_kv_cache_specs(num_layers, num_kv_heads, num_pools, pages_per_pool,
+                        page_size, k_dim, v_dim, dtype):
+    """ShapeDtypeStruct specs — v_dim 0 means V is a view into the latent K
+    pages (MLA)."""
+    specs = {
+        "k_pages": jax.ShapeDtypeStruct(
+            (num_layers, num_kv_heads, num_pools, pages_per_pool, page_size,
+             k_dim), dtype
+        )
+    }
+    if v_dim:
+        specs["v_pages"] = jax.ShapeDtypeStruct(
+            (num_layers, num_kv_heads, num_pools, pages_per_pool, page_size,
+             v_dim), dtype
+        )
+    return specs
+
+
+def physical_slots(page_table: jax.Array, positions: jax.Array,
+                   valid: jax.Array, page_size: int,
+                   pages_per_pool: int) -> jax.Array:
+    """positions [S, T] in-sequence positions -> pool-local flat slots
+    [S, T]; invalid entries -> out-of-range trash slot (scatter-dropped)."""
+    page = jnp.clip(positions, 0, None) // page_size
+    off = jnp.clip(positions, 0, None) % page_size
+    page = jnp.minimum(page, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, page, axis=1) * page_size + off
+    return jnp.where(valid, phys, pages_per_pool * page_size)
+
+
+def write_pages(pages: jax.Array, new: jax.Array, slots: jax.Array):
+    """pages [Hkv, G, P, ps, D]; new [S, T, Hkv, D]; slots [S, T] pool-local
+    flat slots. S = G * B_loc. Batched (per-pool) scatter; out-of-range
+    slots dropped."""
+    hkv, g, p, ps, d = pages.shape
+    s, t = slots.shape
+    b_loc = s // g
+    flat = pages.reshape(hkv, g, p * ps, d)
+    upd = new.transpose(2, 0, 1, 3).reshape(hkv, g, b_loc * t, d)
+    slots3 = slots.reshape(g, b_loc * t)
+    garr = jnp.broadcast_to(jnp.arange(g)[:, None], (g, b_loc * t))
+    flat = flat.at[:, garr, slots3, :].set(upd, mode="drop")
+    return flat.reshape(hkv, g, p, ps, d)
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """[Hkv, G, P, ps, D] + [S, Np] -> [S, Np*ps, Hkv, D] dense per-seq KV.
+    Batched over pools: stays shard-local under GSPMD."""
+    hkv, g, p, ps, d = pages.shape
+    s, np_ = page_table.shape
+    b_loc = s // g
+    pt = page_table.reshape(1, g, b_loc * np_, 1, 1)
+    out = jnp.take_along_axis(pages[:, :, None], pt[..., None], axis=3)
+    # out: [Hkv, G, 1->B*Np broadcast, ...] -> [Hkv, G, B*Np, ps, D]
+    out = out.reshape(hkv, g, b_loc, np_, ps, d)
+    return out.transpose(1, 2, 3, 4, 0, 5).reshape(s, np_ * ps, hkv, d)

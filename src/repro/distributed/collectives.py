@@ -1,0 +1,62 @@
+"""Distributed-optimization collectives: gradient compression for the DP
+axis (usable inside shard_map-based data-parallel training).
+
+Two compression levels, with honest trade-off notes:
+
+  bf16_psum           cast-to-bf16 ring all-reduce: 2x wire reduction, no
+                      state, negligible accuracy cost at LLM scale — the
+                      default recommendation for the ('pod','data') axes
+                      where the gradient reduce crosses slow DCI links.
+
+  int8_ef_allgather   int8 quantization with ERROR FEEDBACK: 4x payload
+                      reduction per shard, exchanged via all-gather + local
+                      dequant-sum (JAX exposes no int8 ring-reduce). Wire
+                      cost is (N-1)/N · size/4 per hop vs 2(N-1)/N · size/4
+                      ... i.e. it beats bf16_psum only for axis sizes
+                      N <= 8 — exactly the multi-pod 'pod' axis (N=2) it is
+                      intended for. Error feedback keeps the quantization
+                      noise unbiased across steps (SGD with EF converges at
+                      the uncompressed rate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_psum(tree, axis_name: str):
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis_name).astype(g.dtype),
+        tree,
+    )
+
+
+def _quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_ef_allgather(tree, axis_name: str, error_feedback):
+    """Returns (summed_tree, new_error_feedback). Call inside shard_map with
+    `axis_name` mapped. error_feedback has the same structure as tree
+    (fp32 residuals, zeros at step 0)."""
+
+    def one(g, ef):
+        gf = g.astype(jnp.float32) + ef
+        q, scale = _quantize_int8(gf)
+        new_ef = gf - q.astype(jnp.float32) * scale
+        qs = jax.lax.all_gather(q, axis_name)  # [N, ...] int8 on the wire
+        ss = jax.lax.all_gather(scale, axis_name)  # [N] scalars
+        total = jnp.tensordot(
+            ss, qs.astype(jnp.float32), axes=([0], [0])
+        )
+        return total.astype(g.dtype), new_ef
+
+    flat, treedef = jax.tree.flatten(tree)
+    ef_flat = treedef.flatten_up_to(error_feedback)
+    out = [one(g, e) for g, e in zip(flat, ef_flat)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )

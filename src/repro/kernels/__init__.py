@@ -1,0 +1,14 @@
+"""Pallas TPU kernels, each as <name>/{kernel.py, ops.py, ref.py}.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling + scalar-prefetch
+block-table indirection) and are validated on CPU in interpret mode against
+the pure-jnp oracles in ref.py.
+
+  paged_attention/  the paper's contribution: C1 baseline, C2 GQA Q-Block,
+                    C3 parallel tiled softmax (+ reduction), C4 adjustable
+                    tiles, C5 static launch grid.
+  flash_attention/  training-side causal flash attention (GQA), fwd kernel +
+                    differentiable scan oracle used as the XLA backend.
+  mamba2/           chunked SSD scan for hybrid archs (zamba2).
+  mlstm/            xLSTM matrix-memory chunkwise kernel.
+"""

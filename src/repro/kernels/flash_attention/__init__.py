@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.flash_attention.ref import (  # noqa: F401
+    flash_attention_xla,
+    mha_reference,
+)

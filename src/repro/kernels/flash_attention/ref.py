@@ -1,0 +1,219 @@
+"""Flash attention oracles + the differentiable XLA backend.
+
+`mha_reference`       naive causal GQA attention (materializes scores) —
+                      the oracle for small shapes.
+`flash_attention_xla` memory-bounded online-softmax attention built from a
+                      lax.scan over KV blocks. Differentiable (used as the
+                      training-path attention and as the `xla` serving
+                      backend inside the multi-device dry-run, where a Pallas
+                      grid cannot be lowered on the host platform).
+
+Layout: q [B, Sq, Hq, D]; k/v [B, Skv, Hkv, D]. `q_offset` gives the absolute
+position of q row 0 relative to k row 0 (for chunked prefill/decode:
+q_offset = kv_len - q_len).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+# Roofline accounting: unroll the KV-block scan so XLA cost_analysis counts
+# every block (a while body is otherwise counted once). Set by repro.roofline.
+UNROLL_SCANS = False
+
+
+def mha_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int | jax.Array = 0,
+    kv_len: jax.Array | None = None,  # [B] valid kv lengths
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    kv_pos = jnp.arange(skv)
+    mask = jnp.ones((b, 1, 1, sq, skv), bool)
+    if causal:
+        q_pos = q_offset + jnp.arange(sq)
+        cm = kv_pos[None, :] <= q_pos[:, None]
+        mask = mask & cm[None, None, None]
+    if kv_len is not None:
+        lm = kv_pos[None, :] < kv_len[:, None]
+        mask = mask & lm[:, None, None, None]
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1, keepdims=True), p, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def _block_mask(b, sq, kv_block, blk, q_pos, causal, kv_len):
+    kv_pos = blk * kv_block + jnp.arange(kv_block)
+    mask = jnp.ones((b, sq, 1, 1, kv_block), bool)
+    if causal:
+        cm = kv_pos[None, :] <= q_pos[:, None]  # [sq, kvb]
+        mask = mask & cm[None, :, None, None, :]
+    if kv_len is not None:
+        lm = kv_pos[None, :] < kv_len[:, None]  # [b, kvb]
+        mask = mask & lm[:, None, None, None, :]
+    return mask
+
+
+def _flash_fwd_core(q, k, v, causal, scale, kv_block, q_offset, kv_len):
+    """Returns (out [B,Sq,Hkv,G,Dv] f32, lse [B,Sq,Hkv,G] f32)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    nkv = skv // kv_block
+    assert nkv * kv_block == skv, (skv, kv_block)
+
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    q_pos = q_offset + jnp.arange(sq)
+    kb = jnp.moveaxis(k.reshape(b, nkv, kv_block, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nkv, kv_block, hkv, dv), 1, 0)
+
+    acc0 = jnp.zeros((b, sq, hkv, g, dv), jnp.float32)
+    m0 = jnp.full((b, sq, hkv, g), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kc, vc, blk = xs
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kc) * scale
+        mask = _block_mask(b, sq, kv_block, blk, q_pos, causal, kv_len)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        m_safe = jnp.where(m_new <= _NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m <= _NEG_INF, 0.0, jnp.exp(m - m_safe))
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vc
+        )
+        return (acc_new, m_new, l_new), None
+
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kb, vb, jnp.arange(nkv)),
+        unroll=True if UNROLL_SCANS else 1,
+    )
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l_safe[..., None]
+    lse = jnp.where(l == 0.0, _NEG_INF, m + jnp.log(l_safe))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, scale, kv_block, q_offset, kv_len):
+    out, _ = _flash_fwd_core(q, k, v, causal, scale, kv_block, q_offset,
+                             kv_len)
+    b, sq, hq, _ = q.shape
+    return out.reshape(b, sq, hq, -1).astype(q.dtype)
+
+
+def _flash_vjp_fwd(q, k, v, causal, scale, kv_block, q_offset, kv_len):
+    out, lse = _flash_fwd_core(q, k, v, causal, scale, kv_block, q_offset,
+                               kv_len)
+    b, sq, hq, _ = q.shape
+    res = (q, k, v, out, lse, kv_len)
+    return out.reshape(b, sq, hq, -1).astype(q.dtype), res
+
+
+def _flash_vjp_bwd(causal, scale, kv_block, q_offset, res, dout):
+    """Flash-attention backward: recompute P per KV block from the saved
+    (out, lse) instead of letting AD store per-block probability residuals
+    — O(S·D) saved state instead of O(S·Skv) (the 60 GiB/device difference
+    on the llama3-405b train cell; EXPERIMENTS.md §Perf)."""
+    q, k, v, out, lse, kv_len = res
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    nkv = skv // kv_block
+
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    dof = dout.astype(jnp.float32).reshape(b, sq, hkv, g, dv)
+    q_pos = q_offset + jnp.arange(sq)
+    kb = jnp.moveaxis(k.reshape(b, nkv, kv_block, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nkv, kv_block, hkv, dv), 1, 0)
+    delta = jnp.sum(dof * out, axis=-1)  # [B,Sq,Hkv,G]
+    lse_safe = jnp.where(lse <= _NEG_INF, 0.0, lse)
+
+    def step(dq, xs):
+        kc, vc, blk = xs
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kc) * scale
+        mask = _block_mask(b, sq, kv_block, blk, q_pos, causal, kv_len)
+        p = jnp.where(mask, jnp.exp(s - lse_safe[..., None]), 0.0)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dof, vc)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bqhgk,bkhd->bqhgd", ds, kc)
+        dk_blk = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qf)
+        dv_blk = jnp.einsum("bqhgk,bqhgd->bkhd", p, dof)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, sq, hkv, g, d), jnp.float32)
+    dq, (dk, dv_) = jax.lax.scan(
+        step, dq0, (kb, vb, jnp.arange(nkv)),
+        unroll=True if UNROLL_SCANS else 1,
+    )
+    dq = dq.reshape(b, sq, hq, d).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(b, skv, hkv, d).astype(k.dtype)
+    dv_ = jnp.moveaxis(dv_, 0, 1).reshape(b, skv, hkv, dv).astype(v.dtype)
+    if kv_len is None:
+        return dq, dk, dv_, None
+    import numpy as np
+    return dq, dk, dv_, np.zeros(kv_len.shape, dtype=jax.dtypes.float0)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "kv_block", "precise", "q_offset"),
+)
+def flash_attention_xla(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_block: int = 1024,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    precise: bool = True,
+) -> jax.Array:
+    """Online-softmax attention as a scan over KV blocks.
+
+    Peak memory ~ O(Sq·kv_block) scores + O(Sq·D) carry instead of
+    O(Sq·Skv), in BOTH directions: the custom VJP recomputes the block
+    probabilities from the saved logsumexp (flash backward) instead of
+    letting AD store them.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    del precise
+    return _flash(q, k, v, causal, scale, kv_block, q_offset, kv_len)

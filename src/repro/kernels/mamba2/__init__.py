@@ -1,0 +1,6 @@
+from repro.kernels.mamba2.ops import mamba2_ssd, mamba2_ssd_trainable  # noqa: F401
+from repro.kernels.mamba2.ref import (  # noqa: F401
+    decode_step,
+    ssd_chunked,
+    ssd_scan_ref,
+)

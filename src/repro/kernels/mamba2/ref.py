@@ -1,0 +1,143 @@
+"""Mamba2 / SSD (state-space duality) oracles.
+
+State recurrence per head (state N, head dim P):
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * (B_t ⊗ x_t)     S: [N, P]
+    y_t = C_t @ S_t + D * x_t
+
+`ssd_scan_ref`  exact per-token recurrent scan (the oracle).
+`ssd_chunked`   chunked SSD form (intra-chunk attention-like matmuls +
+                inter-chunk state scan) — the differentiable XLA fast path
+                used by the model; also what the Pallas kernel implements.
+`decode_step`   single-token state update for serving.
+
+Shapes: x [B, L, H, P]; dt [B, L, H] (already softplus'd, >0); A [H] (<0);
+B/C [B, L, G, N] with G groups (H % G == 0); D [H].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(bc: jax.Array, h: int) -> jax.Array:
+    g = bc.shape[2]
+    return jnp.repeat(bc, h // g, axis=2)
+
+
+def ssd_scan_ref(x, dt, a, b, c, d, *, initial_state=None):
+    """Exact recurrence. Returns (y [B,L,H,P], final_state [B,H,N,P])."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    bm = _expand_groups(b, h).astype(jnp.float32)
+    cm = _expand_groups(c, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * a[None, None, :])  # [B, L, H]
+    dbx = jnp.einsum("blh,blhn,blhp->blhnp", dtf, bm, xf)
+    s0 = (
+        jnp.zeros((bsz, h, n, p), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        da_t, dbx_t, c_t = inp
+        s = da_t[..., None, None] * s + dbx_t
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, s)
+        return s, y
+
+    xs = (
+        jnp.moveaxis(da, 1, 0),
+        jnp.moveaxis(dbx, 1, 0),
+        jnp.moveaxis(cm, 1, 0),
+    )
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * d[None, None, :, None]
+    return y.astype(x.dtype), s_final
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked(x, dt, a, b, c, d, *, chunk: int = 128, initial_state=None):
+    """Chunked SSD (Mamba-2 paper algorithm). Exact same math as the scan.
+
+    Returns (y, final_state). Differentiable; O(L·chunk) intra matmuls +
+    O(L/chunk) sequential state scan.
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    bm = _expand_groups(b, h).astype(jnp.float32)
+    cm = _expand_groups(c, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    # reshape to chunks: [B, nc, Q, H, ...]
+    xc = xf.reshape(bsz, nc, chunk, h, p)
+    dtc = dtf.reshape(bsz, nc, chunk, h)
+    bc = bm.reshape(bsz, nc, chunk, h, n)
+    cc = cm.reshape(bsz, nc, chunk, h, n)
+
+    la = dtc * a[None, None, None, :]  # log-decay per token [B,nc,Q,H]
+    a_cum = jnp.cumsum(la, axis=2)  # inclusive cumsum within chunk
+    a_tot = a_cum[:, :, -1:, :]  # [B,nc,1,H]
+
+    # --- intra-chunk (causal 'attention' with decay kernel) ---
+    # L[i,j] = exp(a_cum[i] - a_cum[j]) for i >= j  (decay from j+1..i)
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", cc, bc) * lmat
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", scores, dtc, xc)
+
+    # --- chunk states ---
+    # S_c = sum_j exp(a_tot - a_cum[j]) * dt_j * B_j x_j^T
+    w = jnp.exp(a_tot - a_cum) * dtc  # [B,nc,Q,H]
+    s_chunk = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w, bc, xc)
+
+    # --- inter-chunk scan ---
+    s0 = (
+        jnp.zeros((bsz, h, n, p), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    decay_chunk = jnp.exp(a_tot[:, :, 0, :])  # [B,nc,H]
+
+    def step(s, inp):
+        dc, sc = inp
+        s_new = dc[..., None, None] * s + sc
+        return s_new, s  # emit state *entering* the chunk
+
+    (s_final, s_in) = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(decay_chunk, 1, 0), jnp.moveaxis(s_chunk, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # [B,nc,H,N,P] state entering chunk
+
+    # --- inter-chunk contribution: y_inter[i] = exp(a_cum[i]) C_i @ S_in ---
+    y_inter = jnp.einsum(
+        "bcqh,bcqhn,bchnp->bcqhp", jnp.exp(a_cum), cc, s_in
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    y = y + xf * d[None, None, :, None]
+    return y.astype(x.dtype), s_final
+
+
+def decode_step(x, dt, a, b, c, d, state):
+    """One-token recurrence. x [B,H,P], dt [B,H], b/c [B,G,N],
+    state [B,H,N,P] -> (y [B,H,P], new_state)."""
+    h = x.shape[1]
+    bm = jnp.repeat(b, h // b.shape[1], axis=1).astype(jnp.float32)
+    cm = jnp.repeat(c, h // c.shape[1], axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * a[None, :])
+    new_state = da[..., None, None] * state + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtf, bm, xf
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", cm, new_state) + xf * d[None, :, None]
+    return y.astype(x.dtype), new_state

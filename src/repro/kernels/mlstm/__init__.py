@@ -1,0 +1,6 @@
+from repro.kernels.mlstm.ops import mlstm, mlstm_trainable  # noqa: F401
+from repro.kernels.mlstm.ref import (  # noqa: F401
+    decode_step,
+    mlstm_chunked,
+    mlstm_scan_ref,
+)

@@ -1,0 +1,167 @@
+"""mLSTM (xLSTM matrix-memory) oracles.
+
+Per head (dim P), with exponential input gating and stabilizer state m:
+    lf_t = logsigmoid(f̃_t)
+    m_t  = max(lf_t + m_{t-1}, ĩ_t)
+    i'   = exp(ĩ_t - m_t);  f' = exp(lf_t + m_{t-1} - m_t)
+    C_t  = f'·C_{t-1} + i'·(k_t v_tᵀ)        C: [P, P] (stabilized)
+    n_t  = f'·n_{t-1} + i'·k_t
+    h_t  = (C_tᵀ q_t) / max(|n_t·q_t|, exp(-m_t))
+
+`mlstm_scan_ref`   exact per-token recurrence (oracle).
+`mlstm_chunked`    stabilized chunkwise-parallel form (differentiable; same
+                   math, matmul-shaped — the xLSTM analog of Mamba2's SSD).
+`decode_step`      single-token update for serving.
+
+Shapes: q/k/v [B, L, H, P] (k pre-scaled by P**-0.5 by the caller or scale
+arg); igate/fgate preactivations [B, L, H].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+def mlstm_scan_ref(q, k, v, igate, fgate, *, initial_state=None, scale=None):
+    """Returns (h [B,L,H,P], (C, n, m) final state)."""
+    b, l, h, p = q.shape
+    if scale is None:
+        scale = p**-0.5
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) * scale
+    vf = v.astype(jnp.float32)
+    ig = igate.astype(jnp.float32)
+    lf = _logsigmoid(fgate.astype(jnp.float32))
+    if initial_state is None:
+        c0 = jnp.zeros((b, h, p, p), jnp.float32)
+        n0 = jnp.zeros((b, h, p), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = initial_state
+
+    def step(carry, inp):
+        c, n, m = carry
+        q_t, k_t, v_t, i_t, lf_t = inp
+        m_new = jnp.maximum(lf_t + m, i_t)
+        ip = jnp.exp(i_t - m_new)
+        fp = jnp.exp(lf_t + m - m_new)  # m=-inf at t=0 -> fp=0
+        c = fp[..., None, None] * c + ip[..., None, None] * (
+            k_t[..., :, None] * v_t[..., None, :]
+        )
+        n = fp[..., None] * n + ip[..., None] * k_t
+        num = jnp.einsum("bhp,bhpd->bhd", q_t, c)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhp,bhp->bh", q_t, n)), jnp.exp(-m_new)
+        )
+        return (c, n, m_new), num / den[..., None]
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, ig, lf)
+    )
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (c, n, m)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "scale"))
+def mlstm_chunked(q, k, v, igate, fgate, *, chunk: int = 64,
+                  initial_state=None, scale=None):
+    """Stabilized chunkwise mLSTM. Exact same math as the scan."""
+    bsz, l, h, p = q.shape
+    if scale is None:
+        scale = p**-0.5
+    assert l % chunk == 0
+    nc = l // chunk
+    qf = q.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    kf = (k.astype(jnp.float32) * scale).reshape(bsz, nc, chunk, h, p)
+    vf = v.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    ig = igate.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    lf = _logsigmoid(fgate.astype(jnp.float32)).reshape(bsz, nc, chunk, h)
+
+    bcum = jnp.cumsum(lf, axis=2)  # inclusive within-chunk [B,nc,Q,H]
+    ftot = bcum[:, :, -1, :]  # [B,nc,H]
+    # g_i = cummax_{j<=i}(ĩ_j - b_j); gq = chunk max
+    imb = ig - bcum
+    g = jax.lax.cummax(imb, axis=2)
+    gq = g[:, :, -1, :]
+
+    if initial_state is None:
+        c0 = jnp.zeros((bsz, h, p, p), jnp.float32)
+        n0 = jnp.zeros((bsz, h, p), jnp.float32)
+        m0 = jnp.full((bsz, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = initial_state
+
+    def chunk_step(carry, inp):
+        c_in, n_in, m_in = carry
+        qc, kc, vc, igc, bc, gc, ftot_c, gq_c = inp
+        # per-position stabilizer m_i = b_i + max(m_in, g_i)
+        m_i = bc + jnp.maximum(m_in[:, None, :], gc)  # [B,Q,H]
+        # intra-chunk decayed scores: w_ij = b_i - b_j + ĩ_j - m_i
+        wmat = (
+            bc[:, :, None, :] - bc[:, None, :, :] + igc[:, None, :, :]
+            - m_i[:, :, None, :]
+        )  # [B,Qi,Qj,H]
+        row = jnp.arange(bc.shape[1])
+        causal = row[:, None] >= row[None, :]
+        dmat = jnp.where(causal[None, :, :, None], jnp.exp(wmat), 0.0)
+        scores = jnp.einsum("bihp,bjhp->bijh", qc, kc) * dmat
+        num = jnp.einsum("bijh,bjhp->bihp", scores, vc)
+        den_vec = jnp.einsum("bijh,bjhp->bihp", dmat, kc)
+        # inter-chunk
+        w_in = jnp.exp(bc + m_in[:, None, :] - m_i)  # [B,Q,H]
+        num += w_in[..., None] * jnp.einsum("bihp,bhpd->bihd", qc, c_in)
+        den_vec += w_in[..., None] * n_in[:, None, :, :]
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bihp,bihp->bih", qc, den_vec)),
+            jnp.exp(-m_i),
+        )
+        h_out = num / den[..., None]
+        # state update
+        m_out = ftot_c + jnp.maximum(m_in, gq_c)  # [B,H]
+        w_state = jnp.exp(
+            ftot_c[:, None, :] - bc + igc - m_out[:, None, :]
+        )  # [B,Q,H]
+        c_out = jnp.exp(ftot_c + m_in - m_out)[..., None, None] * c_in + \
+            jnp.einsum("bjh,bjhp,bjhd->bhpd", w_state, kc, vc)
+        n_out = jnp.exp(ftot_c + m_in - m_out)[..., None] * n_in + \
+            jnp.einsum("bjh,bjhp->bhp", w_state, kc)
+        return (c_out, n_out, m_out), h_out
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (qf, kf, vf, ig, bcum, g, ftot, gq)
+    )
+    (c, n, m), hs = jax.lax.scan(chunk_step, (c0, n0, m0), xs)
+    h_out = jnp.moveaxis(hs, 0, 1).reshape(bsz, l, h, p)
+    return h_out.astype(q.dtype), (c, n, m)
+
+
+def decode_step(q, k, v, igate, fgate, state, *, scale=None):
+    """One-token update. q/k/v [B,H,P]; gates [B,H]; state (C,n,m)."""
+    p = q.shape[-1]
+    if scale is None:
+        scale = p**-0.5
+    c, n, m = state
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) * scale
+    vf = v.astype(jnp.float32)
+    i_t = igate.astype(jnp.float32)
+    lf_t = _logsigmoid(fgate.astype(jnp.float32))
+    m_new = jnp.maximum(lf_t + m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(lf_t + m - m_new)
+    c = fp[..., None, None] * c + ip[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n = fp[..., None] * n + ip[..., None] * kf
+    num = jnp.einsum("bhp,bhpd->bhd", qf, c)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n)), jnp.exp(-m_new)
+    )
+    return (num / den[..., None]).astype(q.dtype), (c, n, m_new)

@@ -1,0 +1,7 @@
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_attention_decode,
+    paged_attention_prefill,
+    build_qblock_metadata,
+    default_tile,
+)
+from repro.kernels.paged_attention import ref  # noqa: F401

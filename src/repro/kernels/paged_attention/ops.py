@@ -1,0 +1,268 @@
+"""Jitted wrappers around the paged-attention Pallas kernels.
+
+Responsibilities (all static-shaped, jit-friendly):
+  * TPU-alignment padding: head_dim -> multiple of 128 lanes, Q-block rows ->
+    multiple of 8 sublanes (the paper's `tl.dot` padding lesson, §8).
+  * reshaping the paged cache [Hkv, P, ps, D] into the tile view
+    [Hkv, P, tiles_per_page, tile, D] (C4: `tile` is decoupled from the page
+    size and may be any divisor that is a multiple of 8).
+  * Q packing for the GQA Q-Block layout (C2) and the prefill metadata
+    (cumulative-Q-block tensor + vectorized binary search, paper §6.1).
+  * variant plumbing: `baseline` / `gqa` / `segmented` (C1/C2/C3).
+
+Interpret mode: `interpret=None` auto-selects True off-TPU so the same call
+sites run on CPU (tests) and TPU (deployment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import kernel as K
+from repro.utils.misc import cdiv, round_up
+
+LANE = 128
+SUBLANE = 8
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_head_dim(x: jax.Array, axis: int = -1) -> jax.Array:
+    d = x.shape[axis]
+    dp = round_up(d, LANE)
+    if dp == d:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, dp - d)
+    return jnp.pad(x, pad)
+
+
+def _tile_view(pages: jax.Array, tile: int) -> jax.Array:
+    """[Hkv, P, ps, D] -> [Hkv, P, ps//tile, tile, D] (free reshape)."""
+    hkv, p, ps, d = pages.shape
+    assert ps % tile == 0, f"tile {tile} must divide page_size {ps}"
+    return pages.reshape(hkv, p, ps // tile, tile, d)
+
+
+def default_tile(page_size: int) -> int:
+    """Largest multiple-of-8 tile <= min(page_size, 512) dividing page_size."""
+    for t in (512, 256, 128, 64, 32, 24, 16, 8):
+        if t <= page_size and page_size % t == 0:
+            return t
+    return page_size
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "variant",
+        "tile",
+        "num_segments",
+        "scale",
+        "interpret",
+    ),
+)
+def paged_attention_decode(
+    q: jax.Array,  # [S, Hq, D]
+    k_pages: jax.Array,  # [Hkv, P, ps, D]
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [S, Np] int32
+    context_lens: jax.Array,  # [S] int32
+    *,
+    variant: Literal["baseline", "gqa", "segmented"] = "gqa",
+    tile: int | None = None,
+    num_segments: int = 8,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-token decode over the paged KV cache. Returns [S, Hq, D]."""
+    interpret = _auto_interpret(interpret)
+    s_, hq, d = q.shape
+    hkv, p, ps, dk = k_pages.shape
+    assert dk == d
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    if tile is None:
+        tile = default_tile(ps)
+    orig_d = d
+    q = _pad_head_dim(q)
+    k_pages = _pad_head_dim(k_pages)
+    v_pages = _pad_head_dim(v_pages)
+    d = q.shape[-1]
+    tpp = ps // tile
+    np_ = page_table.shape[1]
+    num_tiles = np_ * tpp
+    kt = _tile_view(k_pages, tile)
+    vt = _tile_view(v_pages, tile)
+    page_table = page_table.astype(jnp.int32)
+    context_lens = context_lens.astype(jnp.int32)
+
+    if variant == "baseline":
+        # paper §4.3: one (seq, q_head) per cell; each q head re-streams KV.
+        qq = q.reshape(s_, hq, 1, d)
+        out = K.paged_decode(
+            qq, kt, vt, page_table, context_lens,
+            tile=tile, tiles_per_page=tpp, num_tiles=num_tiles,
+            kv_head_of_cell=lambda h: jax.lax.div(h, jnp.int32(group)),
+            scale=scale, interpret=interpret,
+        )
+        out = out.reshape(s_, hq, d)
+    elif variant == "gqa":
+        # paper §4.4: Q-Block = all q heads sharing a KV head.
+        qq = q.reshape(s_, hkv, group, d)
+        out = K.paged_decode(
+            qq, kt, vt, page_table, context_lens,
+            tile=tile, tiles_per_page=tpp, num_tiles=num_tiles,
+            kv_head_of_cell=lambda h: h,
+            scale=scale, interpret=interpret,
+        )
+        out = out.reshape(s_, hq, d)
+    elif variant == "segmented":
+        # paper §4.5: parallel tiled softmax + reduction kernel.
+        nseg = min(num_segments, num_tiles)
+        tps = cdiv(num_tiles, nseg)
+        qq = q.reshape(s_, hkv, group, d)
+        o_seg, m_seg, l_seg = K.paged_decode_segmented(
+            qq, kt, vt, page_table, context_lens,
+            tile=tile, tiles_per_page=tpp, num_segments=nseg,
+            tiles_per_segment=tps, scale=scale, interpret=interpret,
+        )
+        out = K.segment_reduce(o_seg, m_seg, l_seg, q.dtype, interpret=interpret)
+        out = out.reshape(s_, hq, d)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return out[..., :orig_d]
+
+
+# ---------------------------------------------------------------------------
+# Prefill: §6.1 metadata + Q packing + kernel call
+# ---------------------------------------------------------------------------
+
+
+def build_qblock_metadata(
+    query_start_loc: jax.Array,  # [S+1] int32
+    query_lens: jax.Array,  # [S] int32
+    context_lens: jax.Array,  # [S] int32
+    *,
+    block_q: int,
+    num_q_blocks: int,  # static maximum
+):
+    """The paper's §6.1 attention metadata: a cumulative-number-of-Q-Blocks
+    tensor and, per Q block, the owning sequence (vectorized binary search —
+    `find_seq_idx` in Listings 3-5) and the block's first-token absolute
+    position. Dead blocks get seq = -1."""
+    nqb_per_seq = cdiv_arr(query_lens, block_q)
+    cu_qb = jnp.cumsum(nqb_per_seq)  # [S]
+    qb = jnp.arange(num_q_blocks, dtype=jnp.int32)
+    seq = jnp.searchsorted(cu_qb, qb, side="right").astype(jnp.int32)
+    valid = qb < cu_qb[-1]
+    seq_c = jnp.minimum(seq, query_lens.shape[0] - 1)
+    qb_off = qb - jnp.where(seq_c > 0, cu_qb[seq_c - 1], 0)
+    pos0 = context_lens[seq_c] - query_lens[seq_c] + qb_off * block_q
+    qb_seq = jnp.where(valid, seq_c, -1)
+    qb_pos0 = jnp.where(valid, pos0, 0)
+    # global q-row index of the block's first token
+    qb_row0 = jnp.where(valid, query_start_loc[seq_c] + qb_off * block_q, 0)
+    # rows actually live in this block (tail blocks may be ragged)
+    qb_rows = jnp.where(
+        valid,
+        jnp.clip(query_lens[seq_c] - qb_off * block_q, 0, block_q),
+        0,
+    )
+    return qb_seq, qb_pos0, qb_row0, qb_rows
+
+
+def cdiv_arr(a: jax.Array, b: int) -> jax.Array:
+    return -(-a // b)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "tile", "num_q_blocks", "scale", "interpret"),
+)
+def paged_attention_prefill(
+    q: jax.Array,  # [T, Hq, D]
+    k_pages: jax.Array,  # [Hkv, P, ps, D]
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [S, Np]
+    context_lens: jax.Array,  # [S]
+    query_start_loc: jax.Array,  # [S+1]
+    query_lens: jax.Array,  # [S]
+    *,
+    block_q: int = 16,
+    tile: int | None = None,
+    num_q_blocks: int | None = None,  # static; default T//block_q + S
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Chunked-prefill attention over the paged cache (Q-Block kernel, C2).
+
+    The chunk's K/V must already be written to the pages. Returns [T, Hq, D]
+    with zeros in dead rows.
+    """
+    interpret = _auto_interpret(interpret)
+    t, hq, d = q.shape
+    s_ = query_lens.shape[0]
+    hkv, p, ps, _ = k_pages.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    if tile is None:
+        tile = default_tile(ps)
+    if num_q_blocks is None:
+        num_q_blocks = t // block_q + s_
+    orig_d = d
+    q = _pad_head_dim(q)
+    k_pages = _pad_head_dim(k_pages)
+    v_pages = _pad_head_dim(v_pages)
+    d = q.shape[-1]
+    tpp = ps // tile
+    np_ = page_table.shape[1]
+    num_kv_tiles = np_ * tpp
+    page_table = page_table.astype(jnp.int32)
+    context_lens = context_lens.astype(jnp.int32)
+    query_start_loc = query_start_loc.astype(jnp.int32)
+    query_lens = query_lens.astype(jnp.int32)
+
+    qb_seq, qb_pos0, qb_row0, qb_rows = build_qblock_metadata(
+        query_start_loc, query_lens, context_lens,
+        block_q=block_q, num_q_blocks=num_q_blocks,
+    )
+
+    # ---- pack Q into [NQB, Hkv, BM, D], row = tok*group + g ----
+    tok = jnp.arange(block_q, dtype=jnp.int32)
+    rows = qb_row0[:, None] + tok[None, :]  # [NQB, BQ]
+    row_live = tok[None, :] < qb_rows[:, None]
+    rows_safe = jnp.where(row_live, jnp.minimum(rows, t - 1), 0)
+    qg = q.reshape(t, hkv, group, d)
+    q_packed = qg[rows_safe]  # [NQB, BQ, Hkv, G, D]
+    q_packed = jnp.where(row_live[:, :, None, None, None], q_packed, 0)
+    bm = block_q * group
+    q_packed = q_packed.transpose(0, 2, 1, 3, 4).reshape(
+        num_q_blocks, hkv, bm, d
+    )
+
+    o_packed = K.paged_prefill_qblock(
+        q_packed, _tile_view(k_pages, tile), _tile_view(v_pages, tile),
+        qb_seq, qb_pos0, page_table, context_lens,
+        tile=tile, tiles_per_page=tpp, num_kv_tiles=num_kv_tiles,
+        block_q=block_q, group=group, scale=scale, interpret=interpret,
+    )
+
+    # ---- scatter back to [T, Hq, D]; dead rows -> dropped ----
+    o_packed = o_packed.reshape(num_q_blocks, hkv, block_q, group, d)
+    o_packed = o_packed.transpose(0, 2, 1, 3, 4)  # [NQB, BQ, Hkv, G, D]
+    scatter_rows = jnp.where(row_live, rows, t)  # OOB -> dropped
+    out = jnp.zeros((t + 1, hkv, group, d), q.dtype)
+    out = out.at[scatter_rows.reshape(-1)].set(
+        o_packed.reshape(num_q_blocks * block_q, hkv, group, d), mode="drop"
+    )
+    return out[:t].reshape(t, hq, d)[..., :orig_d]

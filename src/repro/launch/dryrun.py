@@ -1,0 +1,334 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and record memory/cost/collective artifacts for §Roofline.
+
+Per cell:
+  1. FULL-DEPTH compile (scan-over-layers): proves the sharding config is
+     coherent on the production mesh; memory_analysis() -> per-device bytes.
+  2. (single-pod only, unless --roofline-all) two DEPTH-REDUCED UNROLLED
+     compiles; cost_analysis + HLO-collective parse, extrapolated linearly
+     in depth units to the full program (exact for homogeneous stacks; ±2%
+     for zamba2's ragged tail — see DESIGN.md).
+
+Artifacts: benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+
+Usage:
+  python -m repro.launch.dryrun [--arch A] [--shape S] [--mesh single|multi]
+                                [--skip-existing] [--list]
+"""
+import argparse  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, input_specs, shape_applies  # noqa: E402
+from repro.configs.base import InputShape, ModelConfig  # noqa: E402
+from repro.distributed import param_sharding as PS  # noqa: E402
+from repro.distributed import sharding as SH  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.roofline import analysis as RA  # noqa: E402
+from repro.roofline import hw  # noqa: E402
+from repro.training.trainer import make_train_state_abstract  # noqa: E402
+from repro.utils.misc import cdiv  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "benchmarks", "artifacts", "dryrun",
+)
+
+FSDP_ARCHS = {"llama3-405b", "llama4-maverick-400b-a17b", "deepseek-v2-236b"}
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter/flop model
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts from the abstract init."""
+    abs_params = M.init_abstract(cfg)
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abs_params))
+    active = total
+    if cfg.moe.num_experts:
+        m = cfg.moe
+        n_moe_layers = M._moe_layout(cfg)[1]
+        inactive_experts = m.num_experts - m.top_k
+        active -= 3 * cfg.d_model * m.d_ff_expert * inactive_experts \
+            * n_moe_layers
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS: 6·N_active·D (train) / 2·N_active·D (inference)."""
+    _, active = count_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch  # decode: one token per seq
+
+
+# ---------------------------------------------------------------------------
+# per-cell program construction
+# ---------------------------------------------------------------------------
+
+
+def _pool_layout(cfg, shape, data_n):
+    b = shape.global_batch
+    pools = data_n if b % data_n == 0 else 1
+    pages_per_seq = cdiv(shape.seq_len, cfg.page_size)
+    pages_per_pool = (b // pools) * pages_per_seq + 1  # +1 NULL page
+    return pools, pages_per_pool, pages_per_seq
+
+
+def build_cell(cfg: ModelConfig, shape: InputShape, mesh, *,
+               multi_pod: bool, microbatches: int = 1):
+    """Returns (jitted_fn, abstract_args tuple) ready to lower."""
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    data_n = 1
+    for a in batch_axes:
+        data_n *= mesh.shape[a]
+    fsdp = cfg.name.split("-reduced")[0] in FSDP_ARCHS
+
+    if shape.kind == "train":
+        state_abs = make_train_state_abstract(cfg)
+        state_sh = PS.assign_param_shardings(
+            state_abs, mesh=mesh, fsdp=fsdp, batch_axes=batch_axes)
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = PS.assign_batch_shardings(
+            batch_abs, mesh=mesh, batch_axes=batch_axes)
+        from repro.training.trainer import make_train_step
+
+        step = make_train_step(cfg, raw=True, microbatches=microbatches)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        return fn, (state_abs, batch_abs)
+
+    # serve cells
+    pools, pages_per_pool, pages_per_seq = _pool_layout(cfg, shape, data_n)
+    params_abs = M.init_abstract(cfg)
+    params_sh = PS.assign_param_shardings(
+        params_abs, mesh=mesh, fsdp=fsdp, batch_axes=batch_axes)
+    cache_abs = M.make_cache_specs(
+        cfg, max_seqs=shape.global_batch, num_pages=pages_per_pool,
+        num_pools=pools)
+    cache_sh = PS.assign_cache_shardings(cache_abs, mesh=mesh,
+                                         batch_axes=batch_axes)
+    batch_abs = input_specs(cfg, shape, pages_per_seq=pages_per_seq)
+    batch_sh = PS.assign_batch_shardings(batch_abs, mesh=mesh,
+                                         batch_axes=batch_axes)
+    apply = M.apply_prefill if shape.kind == "prefill" else M.apply_decode
+    fn = jax.jit(
+        functools.partial(apply, cfg, backend="xla"),
+        in_shardings=(params_sh, cache_sh, batch_sh),
+        donate_argnums=(1,),
+    )
+    return fn, (params_abs, cache_abs, batch_abs)
+
+
+def roofline_depths(cfg: ModelConfig) -> tuple[int, int, int, float]:
+    """(L1, L2, note_units...) depth pair + unit counts for extrapolation.
+    Returns (L1, L2, (u1, u2, full_units))."""
+    if cfg.family == "hybrid":
+        p = cfg.ssm.shared_attn_period
+        return 2 * p, 4 * p, (2 * p, 4 * p, cfg.num_layers)
+    if cfg.family == "ssm":
+        p = cfg.ssm.slstm_period
+        return p, 2 * p, (p, 2 * p, cfg.num_layers)
+    lead = cfg.moe.first_k_dense if cfg.moe.num_experts else 0
+    return lead + 2, lead + 4, (2, 4, cfg.num_layers - lead)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             roofline: bool = True, out_dir: str = ARTIFACT_DIR,
+             cfg_overrides: dict | None = None, microbatches: int = 1,
+             tag: str = "") -> dict:
+    cfg = ARCHS[arch]
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    multi_pod = mesh_kind == "multi"
+    applies, reason = shape_applies(cfg, shape)
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "skip", "reason": reason,
+        "tag": tag, "cfg_overrides": cfg_overrides or {},
+        "microbatches": microbatches,
+    }
+    if not applies:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{arch}__{shape_name}__{mesh_kind}.json"),
+                "w") as f:
+            json.dump(record, f, indent=1)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = hw.CHIPS_MULTI_POD if multi_pod else hw.CHIPS_SINGLE_POD
+    rules = SH.make_rules(multi_pod=multi_pod,
+                          fsdp=cfg.name in FSDP_ARCHS,
+                          sp=(shape.kind == "train"))
+    t0 = time.time()
+    with SH.use_rules(mesh, rules):
+        # --- 1. full-depth compile (shardability + memory) ----------------
+        fn, args = build_cell(cfg, shape, mesh, multi_pod=multi_pod,
+                              microbatches=microbatches)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        record.update({
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "chips": chips,
+            "memory_per_device": {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "total_bytes": int(ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes
+                                   - ma.alias_size_in_bytes),
+                "hbm_per_chip": hw.HBM_PER_CHIP,
+                "fits": bool(ma.argument_size_in_bytes
+                             + ma.output_size_in_bytes
+                             + ma.temp_size_in_bytes
+                             - ma.alias_size_in_bytes < hw.HBM_PER_CHIP),
+            },
+        })
+        del compiled, lowered, fn
+
+        # --- 2. roofline lowerings (depth-reduced, unrolled) ---------------
+        if roofline:
+            M.UNROLL_BLOCKS = True
+            import repro.kernels.flash_attention.ref as fref
+            fref.UNROLL_SCANS = True
+            jax.clear_caches()
+            try:
+                l1, l2, (u1, u2, ufull) = roofline_depths(cfg)
+                depth_costs = {}
+                for lx, ux in ((l1, u1), (l2, u2)):
+                    cfg_r = cfg.replace(num_layers=lx)
+                    fnr, argsr = build_cell(cfg_r, shape, mesh,
+                                            multi_pod=multi_pod,
+                                            microbatches=microbatches)
+                    comp = fnr.lower(*argsr).compile()
+                    depth_costs[ux] = RA.extract_costs(comp)
+                    del comp, fnr
+                cost = RA.extrapolate(depth_costs, ufull)
+                # analytic in-loop corrections (xLSTM only)
+                if cfg.family == "ssm" and shape.kind in ("train", "prefill"):
+                    b_dev = max(shape.global_batch // (chips // 16), 1)
+                    n_m, n_s, _ = M.xlstm_layout(cfg)
+                    f1, b1 = RA.mlstm_chunk_scan_correction(
+                        batch_per_dev=b_dev, seq=shape.seq_len,
+                        heads=cfg.ssm.num_heads, head_dim=cfg.ssm.head_dim,
+                        chunk=cfg.ssm.chunk, n_layers=n_m)
+                    f2, b2 = RA.slstm_time_scan_correction(
+                        batch_per_dev=b_dev, seq=shape.seq_len,
+                        d_model=cfg.d_model, num_heads=cfg.ssm.num_heads,
+                        n_layers=n_s)
+                    mult = 3 if shape.kind == "train" else 1  # fwd+bwd
+                    cost.flops += (f1 + f2) * mult
+                    cost.bytes_hbm += (b1 + b2) * mult
+                    cost.corrected = True
+                mf = model_flops(cfg, shape)
+                n_total, n_active = count_params(cfg)
+                record["roofline"] = {
+                    "flops_per_device": cost.flops,
+                    "bytes_per_device": cost.bytes_hbm,
+                    "collective_bytes_per_device": cost.coll_bytes,
+                    "collective_breakdown": cost.coll_breakdown,
+                    "corrected": cost.corrected,
+                    **cost.terms(),
+                    "dominant": cost.dominant(),
+                    "model_flops": mf,
+                    "model_flops_per_device": mf / chips,
+                    "useful_flops_ratio": (mf / chips) / max(cost.flops, 1.0),
+                    "params_total": n_total,
+                    "params_active": n_active,
+                }
+            finally:
+                M.UNROLL_BLOCKS = False
+                fref.UNROLL_SCANS = False
+                jax.clear_caches()
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def all_cells(mesh_kinds=("single", "multi")):
+    for arch in ARCHS:
+        for shape_name in SHAPES:
+            for mk in mesh_kinds:
+                yield arch, shape_name, mk
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    cells = [
+        c for c in all_cells()
+        if (args.arch is None or c[0] == args.arch)
+        and (args.shape is None or c[1] == args.shape)
+        and (args.mesh is None or c[2] == args.mesh)
+    ]
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+    failures = 0
+    for arch, shape_name, mk in cells:
+        fname = os.path.join(ARTIFACT_DIR,
+                             f"{arch}__{shape_name}__{mk}.json")
+        if args.skip_existing and os.path.exists(fname):
+            print(f"[cached] {arch} {shape_name} {mk}")
+            continue
+        # roofline terms are a single-pod deliverable (§Roofline)
+        roofline = (mk == "single") and not args.no_roofline
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape_name, mk, roofline=roofline)
+            mem = rec.get("memory_per_device", {})
+            status = rec["status"] + ("" if rec["status"] != "skip"
+                                      else f" ({rec['reason']})")
+            extra = ""
+            if mem:
+                extra = (f" mem/dev={mem['total_bytes'] / 2**30:.2f}GiB"
+                         f" fits={mem['fits']}")
+            if "roofline" in rec:
+                r = rec["roofline"]
+                extra += (f" dom={r['dominant']}"
+                          f" useful={r['useful_flops_ratio']:.2f}")
+            print(f"[{status}] {arch} {shape_name} {mk}"
+                  f" ({time.time() - t0:.0f}s){extra}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {arch} {shape_name} {mk}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Primitive layers (pure functions over plain-pytree params).
+
+Parameters are nested dicts of jax.Arrays produced by the `init_*` helpers;
+no framework objects. All matmuls run in the param dtype with fp32
+accumulation where it matters (norms, softmax, rope are fp32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, *, bias=False, dtype=jnp.float32, std=None):
+    if std is None:
+        std = d_in**-0.5
+    p = {"w": truncated_normal(key, (d_in, d_out), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rms_norm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab, d, dtype=jnp.float32):
+    return {"table": truncated_normal(key, (vocab, d), d**-0.5, dtype)}
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def unembed(p, x):
+    """Logits in fp32 (the standard loss-stability choice)."""
+    return x.astype(jnp.float32) @ p["table"].T.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (plain + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               rotary_dim: int | None = None) -> jax.Array:
+    """x [..., S, H, D]; positions [..., S] (ints). Rotates pairs
+    (x[..., :D/2], x[..., D/2:]) — the llama 'half rotation' convention."""
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    freqs = rope_frequencies(rd, theta)  # [rd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, rd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, rd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : rd // 2], xf[..., rd // 2 : rd]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if rd < d:
+        rot = jnp.concatenate([rot, xf[..., rd:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions [3, ..., S] (t/h/w triplets);
+    `sections` split the *pair* dimension (D/2) across the three axes."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_frequencies(d, theta)  # [d/2]
+    # per-pair axis selection: which of (t, h, w) drives each frequency pair
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )  # [d/2] in {0,1,2}
+    ang_all = positions[..., None].astype(jnp.float32) * freqs  # [3, ..., S, d/2]
+    angles = jnp.einsum(
+        "a...sf,af->...sf",
+        ang_all,
+        jax.nn.one_hot(sec_id, 3, dtype=jnp.float32).T,
+    )
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : d // 2], xf[..., d // 2 :]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU family)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d, d_ff, *, dtype=jnp.float32, fused=False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if fused:
+        # single gate|up matmul: one activation all-gather per MLP block
+        return {
+            "gate_up": init_linear(k1, d, 2 * d_ff, dtype=dtype),
+            "down": init_linear(k3, d_ff, d, dtype=dtype, std=d_ff**-0.5),
+        }
+    return {
+        "gate": init_linear(k1, d, d_ff, dtype=dtype),
+        "up": init_linear(k2, d, d_ff, dtype=dtype),
+        "down": init_linear(k3, d_ff, d, dtype=dtype, std=d_ff**-0.5),
+    }
+
+
+def mlp(p, x):
+    if "gate_up" in p:
+        gu = linear(p["gate_up"], x)
+        d_ff = gu.shape[-1] // 2
+        return linear(p["down"],
+                      jax.nn.silu(gu[..., :d_ff]) * gu[..., d_ff:])
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  conv_state: jax.Array | None = None,
+                  seq_lens: jax.Array | None = None):
+    """Depthwise causal conv. x [B, S, C]; w [K, C]. Returns (y, new_state
+    [B, K-1, C]): the last K-1 *valid* inputs (seq_lens [B] marks the valid
+    right-padded prefix; None = all S valid)."""
+    k = w.shape[0]
+    b, s, c = x.shape
+    if conv_state is None:
+        pad = jnp.zeros((b, k - 1, c), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, C]
+    y = sum(xp[:, i : i + s] * w[i][None, None, :] for i in range(k))
+    if k == 1:
+        return y, jnp.zeros((b, 0, c), x.dtype)
+    if seq_lens is None:
+        new_state = xp[:, -(k - 1) :]
+    else:
+        # token j lives at xp row (K-1)+j; last valid token is seq_lens-1,
+        # so the state rows are xp[seq_lens .. seq_lens+K-2]
+        idx = seq_lens[:, None] + jnp.arange(k - 1)[None, :]  # [B, K-1]
+        idx = jnp.clip(idx, 0, s + k - 2)
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    return y, new_state

@@ -1,0 +1,522 @@
+"""Model assembly: embed -> block stack (scan-over-layers) -> norm -> head.
+
+Families:
+  dense / moe / audio / vlm : uniform decoder blocks (attention + MLP/MoE)
+  hybrid (zamba2)           : Mamba2 blocks with a weight-SHARED global
+                              attention block every `shared_attn_period`
+                              positions (6 invocations over 38 blocks)
+  ssm (xlstm)               : groups of (slstm_period-1) mLSTM + 1 sLSTM
+
+Layers are stacked and executed with jax.lax.scan so compile time is
+independent of depth (essential for the 126-layer dry-run); train mode wraps
+the block body in jax.checkpoint (full remat).
+
+Three entry points mirror the three lowered programs:
+  apply_train(cfg, params, batch)            -> (loss, metrics)
+  apply_prefill(cfg, params, cache, batch)   -> (last_logits, new_cache)
+  apply_decode(cfg, params, cache, batch)    -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.paged.kv_cache import make_kv_cache_specs
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm_blocks as S
+from repro.models.attention import attention, init_attention, kv_cache_dims
+from repro.models.moe import (
+    init_moe, moe_ffn, moe_ffn_dropless, moe_ffn_dropless_ep,
+)
+
+# Roofline accounting mode: XLA's cost_analysis counts a while-loop body
+# exactly once, so the depth-reduced roofline lowerings unroll the layer
+# stack into straight-line HLO (repro.roofline flips this).
+UNROLL_BLOCKS = False
+
+
+def _scan(body, carry, xs):
+    if not UNROLL_BLOCKS:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0] if xs is not None else 0
+    ys = []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ts: jnp.stack(ts, 0), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_decoder_block(cfg: ModelConfig, key, *, use_moe: bool):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "attn": init_attention(cfg, k1),
+        "ln2": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+    }
+    if use_moe:
+        p["moe"] = init_moe(cfg, k2)
+    else:
+        p["mlp"] = L.init_mlp(k3, cfg.d_model, cfg.d_ff,
+                              dtype=cfg.param_dtype, fused=cfg.fused_mlp)
+    del k4
+    return p
+
+
+def _moe_layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(num_leading_dense_blocks, num_scanned_blocks)."""
+    lead = cfg.moe.first_k_dense if cfg.moe.num_experts else 0
+    return lead, cfg.num_layers - lead
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 8)
+    p: dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model,
+                                  cfg.param_dtype),
+        "ln_f": L.init_rms_norm(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.init_linear(keys[1], cfg.d_model, cfg.vocab_size,
+                                     dtype=cfg.param_dtype)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        lead, n_scan = _moe_layout(cfg)
+        if lead:
+            p["lead_blocks"] = [
+                _init_decoder_block(cfg, k, use_moe=False)
+                for k in jax.random.split(keys[2], lead)
+            ]
+        use_moe = cfg.moe.num_experts > 0
+        bkeys = jax.random.split(keys[3], n_scan)
+        p["blocks"] = jax.vmap(
+            lambda k: _init_decoder_block(cfg, k, use_moe=use_moe)
+        )(bkeys)
+    elif cfg.family == "hybrid":
+        n_mamba, n_attn, _ = hybrid_layout(cfg)
+        p["mamba"] = jax.vmap(lambda k: S.init_mamba2_block(cfg, k))(
+            jax.random.split(keys[4], n_mamba)
+        )
+        p["mamba_ln"] = jax.vmap(
+            lambda k: L.init_rms_norm(cfg.d_model, cfg.param_dtype)
+        )(jax.random.split(keys[5], n_mamba))
+        p["shared"] = _init_decoder_block(cfg, keys[6], use_moe=False)
+    elif cfg.family == "ssm":
+        n_m, n_s, _ = xlstm_layout(cfg)
+        p["mlstm"] = jax.vmap(lambda k: S.init_mlstm_block(cfg, k))(
+            jax.random.split(keys[4], n_m)
+        )
+        p["mlstm_ln"] = jax.vmap(
+            lambda k: L.init_rms_norm(cfg.d_model, cfg.param_dtype)
+        )(jax.random.split(keys[5], n_m))
+        p["slstm"] = jax.vmap(lambda k: S.init_slstm_block(cfg, k))(
+            jax.random.split(keys[6], n_s)
+        )
+        p["slstm_ln"] = jax.vmap(
+            lambda k: L.init_rms_norm(cfg.d_model, cfg.param_dtype)
+        )(jax.random.split(keys[7], n_s))
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def hybrid_layout(cfg: ModelConfig):
+    """zamba2: every `period`-th block is the shared attention block.
+    Returns (n_mamba, n_attn, group_size) with layout
+    [ (period-1) mamba + 1 shared-attn ] * n_attn + tail mamba."""
+    period = cfg.ssm.shared_attn_period
+    n_attn = cfg.num_layers // period
+    n_mamba = cfg.num_layers - n_attn
+    return n_mamba, n_attn, period - 1
+
+
+def xlstm_layout(cfg: ModelConfig):
+    period = cfg.ssm.slstm_period
+    n_s = cfg.num_layers // period
+    n_m = cfg.num_layers - n_s
+    return n_m, n_s, period - 1
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def attn_layer_count(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return hybrid_layout(cfg)[1]
+    if cfg.family == "ssm":
+        return 0
+    return cfg.num_layers
+
+
+def make_cache_specs(cfg: ModelConfig, *, max_seqs: int, num_pages: int,
+                     num_pools: int = 1):
+    """ShapeDtypeStruct pytree of the serving cache. `num_pages` is PER
+    POOL; num_pools = data-parallel degree (1 on a single host)."""
+    specs: dict[str, Any] = {}
+    n_attn = attn_layer_count(cfg)
+    if n_attn:
+        hkv, dk, dv = kv_cache_dims(cfg)
+        specs["attn"] = make_kv_cache_specs(
+            n_attn, hkv, num_pools, num_pages, cfg.page_size, dk, dv,
+            cfg.param_dtype
+        )
+    if cfg.family == "hybrid":
+        n_mamba = hybrid_layout(cfg)[0]
+        per = S.mamba2_cache_specs(cfg, max_seqs)
+        specs["mamba"] = {
+            k: jax.ShapeDtypeStruct((n_mamba,) + v.shape, v.dtype)
+            for k, v in per.items()
+        }
+    if cfg.family == "ssm":
+        n_m, n_s, _ = xlstm_layout(cfg)
+        per_m = S.mlstm_cache_specs(cfg, max_seqs)
+        per_s = S.slstm_cache_specs(cfg, max_seqs)
+        specs["mlstm"] = {
+            k: jax.ShapeDtypeStruct((n_m,) + v.shape, v.dtype)
+            for k, v in per_m.items()
+        }
+        specs["slstm"] = {
+            k: jax.ShapeDtypeStruct((n_s,) + v.shape, v.dtype)
+            for k, v in per_s.items()
+        }
+    return specs
+
+
+def make_cache(cfg: ModelConfig, *, max_seqs: int, num_pages: int,
+               num_pools: int = 1):
+    cache = jax.tree.map(
+        lambda sp: jnp.zeros(sp.shape, sp.dtype),
+        make_cache_specs(cfg, max_seqs=max_seqs, num_pages=num_pages,
+                         num_pools=num_pools),
+    )
+    # the mLSTM stabilizer starts at -inf
+    if "mlstm" in cache:
+        cache["mlstm"]["m"] = jnp.full_like(cache["mlstm"]["m"], -jnp.inf)
+    if "slstm" in cache:
+        cache["slstm"]["m"] = jnp.full_like(cache["slstm"]["m"], -jnp.inf)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _decoder_block(cfg, p, x, positions, *, mode, cache, meta, backend):
+    h, new_cache = attention(
+        cfg, p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps), positions,
+        mode=mode, cache=cache, meta=meta, backend=backend,
+    )
+    x = x + h
+    h2 = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        # train: GShard capacity dispatch (GSPMD-sharded einsums);
+        # serve: dropless sort + ragged grouped GEMM (inference never
+        # drops); distributed serve: shard_map expert-parallel dropless
+        # (§Perf: the GSPMD-lowered global sort/ragged_dot replicates)
+        from repro.distributed import sharding as dsh
+        if mode == "train":
+            y, aux = moe_ffn(cfg, p["moe"], h2)
+        elif cfg.moe_ep_serve and dsh.active():
+            y, aux = moe_ffn_dropless_ep(cfg, p["moe"], h2)
+        else:
+            y, aux = moe_ffn_dropless(cfg, p["moe"], h2)
+    else:
+        y, aux = L.mlp(p["mlp"], h2), jnp.zeros((), jnp.float32)
+    return x + y, new_cache, aux
+
+
+def _embed_inputs(cfg, params, inputs):
+    if cfg.input_kind == "embeds" and inputs.ndim == 3:
+        x = inputs.astype(cfg.param_dtype)
+    else:
+        x = L.embed(params["embed"], inputs)
+    return constrain(x, "batch", "seq_sp", "embed")
+
+
+def _head(cfg, params, x):
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.linear(params["lm_head"], x).astype(jnp.float32)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
+            cache=None, meta=None, backend: str = "xla"):
+    """Returns (logits [B,S,V] fp32, new_cache, aux_loss)."""
+    x = _embed_inputs(cfg, params, inputs)
+    meta = meta or {}
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+    remat = mode == "train"
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        lead, _ = _moe_layout(cfg)
+        attn_cache = (cache or {}).get("attn")
+        layer_off = 0
+        for lp in params.get("lead_blocks", []):
+            c_l = (jax.tree.map(lambda t: t[layer_off], attn_cache)
+                   if attn_cache is not None else None)
+            x, nc, aux = _decoder_block(cfg, lp, x, positions, mode=mode,
+                                        cache=c_l, meta=meta, backend=backend)
+            aux_total += aux
+            if nc is not None:
+                new_cache.setdefault("_lead", []).append(nc)
+            layer_off += 1
+
+        def body(carry, per_layer):
+            x, aux = carry
+            p_l, c_l = per_layer
+            x, nc, a = _decoder_block(cfg, p_l, x, positions, mode=mode,
+                                      cache=c_l, meta=meta, backend=backend)
+            return (x, aux + a), nc
+
+        if remat:
+            body = jax.checkpoint(body)
+        scan_cache = (
+            jax.tree.map(lambda t: t[layer_off:], attn_cache)
+            if attn_cache is not None else None
+        )
+        (x, aux_total), nc_stack = _scan(
+            body, (x, aux_total), (params["blocks"], scan_cache)
+        )
+        if nc_stack is not None and attn_cache is not None:
+            lead_stack = new_cache.pop("_lead", [])
+            if lead_stack:
+                nc_stack = jax.tree.map(
+                    lambda lead0, rest: jnp.concatenate(
+                        [jnp.stack([lead0]), rest], axis=0
+                    ),
+                    lead_stack[0], nc_stack,
+                )
+            new_cache["attn"] = nc_stack
+
+    elif cfg.family == "hybrid":
+        x, new_cache, aux_total = _hybrid_forward(
+            cfg, params, x, positions, mode=mode, cache=cache, meta=meta,
+            backend=backend, remat=remat,
+        )
+    elif cfg.family == "ssm":
+        x, new_cache, aux_total = _xlstm_forward(
+            cfg, params, x, positions, mode=mode, cache=cache, meta=meta,
+            remat=remat,
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    return _head(cfg, params, x), (new_cache or None), aux_total
+
+
+def _serve_masks(mode, meta, b, s):
+    if mode == "prefill":
+        qlens = meta["query_lens"]
+        valid = jnp.arange(s)[None, :] < qlens[:, None]
+        return valid, qlens
+    if mode == "decode":
+        live = meta["context_lens"] > 0
+        return live[:, None], live.astype(jnp.int32)
+    return None, None
+
+
+def _hybrid_forward(cfg, params, x, positions, *, mode, cache, meta, backend,
+                    remat):
+    n_mamba, n_attn, group = hybrid_layout(cfg)
+    b, s, _ = x.shape
+    valid, seq_lens = _serve_masks(mode, meta, b, s)
+    m_cache = (cache or {}).get("mamba")
+    a_cache = (cache or {}).get("attn")
+    aux = jnp.zeros((), jnp.float32)
+
+    def mamba_body(x, per_layer):
+        p_l, ln_l, c_l = per_layer
+        h, nc = S.mamba2_block(
+            cfg, p_l, L.rms_norm(ln_l, x, cfg.norm_eps), mode=mode,
+            cache=c_l, valid=valid, seq_lens=seq_lens,
+        )
+        return x + h, nc
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def mamba_slice(tree, lo, hi):
+        return jax.tree.map(lambda t: t[lo:hi], tree)
+
+    new_m, new_a = [], []
+    off = 0
+    for g in range(n_attn):
+        xs = (
+            mamba_slice(params["mamba"], off, off + group),
+            mamba_slice(params["mamba_ln"], off, off + group),
+            mamba_slice(m_cache, off, off + group) if m_cache is not None else None,
+        )
+        x, nc = _scan(mamba_body, x, xs)
+        new_m.append(nc)
+        off += group
+        c_l = (jax.tree.map(lambda t: t[g], a_cache)
+               if a_cache is not None else None)
+        x, nca, a = _decoder_block(cfg, params["shared"], x, positions,
+                                   mode=mode, cache=c_l, meta=meta,
+                                   backend=backend)
+        aux += a
+        new_a.append(nca)
+    if off < n_mamba:  # tail
+        xs = (
+            mamba_slice(params["mamba"], off, n_mamba),
+            mamba_slice(params["mamba_ln"], off, n_mamba),
+            mamba_slice(m_cache, off, n_mamba) if m_cache is not None else None,
+        )
+        x, nc = _scan(mamba_body, x, xs)
+        new_m.append(nc)
+
+    new_cache = {}
+    if m_cache is not None:
+        new_cache["mamba"] = jax.tree.map(
+            lambda *ts: jnp.concatenate(ts, 0), *new_m
+        )
+        new_cache["attn"] = jax.tree.map(
+            lambda *ts: jnp.stack(ts, 0), *new_a
+        )
+    return x, new_cache, aux
+
+
+def _xlstm_forward(cfg, params, x, positions, *, mode, cache, meta, remat):
+    n_m, n_s, group = xlstm_layout(cfg)
+    b, s, _ = x.shape
+    valid, seq_lens = _serve_masks(mode, meta, b, s)
+    m_cache = (cache or {}).get("mlstm")
+    s_cache = (cache or {}).get("slstm")
+    del positions  # xLSTM is position-free (recurrence carries order)
+
+    def mlstm_body(x, per_layer):
+        p_l, ln_l, c_l = per_layer
+        h, nc = S.mlstm_block(
+            cfg, p_l, L.rms_norm(ln_l, x, cfg.norm_eps), mode=mode,
+            cache=c_l, valid=valid, seq_lens=seq_lens,
+        )
+        return x + h, nc
+
+    if remat:
+        mlstm_body = jax.checkpoint(mlstm_body)
+
+    def tslice(tree, lo, hi):
+        return jax.tree.map(lambda t: t[lo:hi], tree)
+
+    new_m, new_s = [], []
+    off = 0
+    for g in range(n_s):
+        xs = (
+            tslice(params["mlstm"], off, off + group),
+            tslice(params["mlstm_ln"], off, off + group),
+            tslice(m_cache, off, off + group) if m_cache is not None else None,
+        )
+        x, nc = _scan(mlstm_body, x, xs)
+        new_m.append(nc)
+        off += group
+        c_l = (jax.tree.map(lambda t: t[g], s_cache)
+               if s_cache is not None else None)
+        ln = jax.tree.map(lambda t: t[g], params["slstm_ln"])
+        p_l = jax.tree.map(lambda t: t[g], params["slstm"])
+        h, ncs = S.slstm_block(cfg, p_l, L.rms_norm(ln, x, cfg.norm_eps),
+                               mode=mode, cache=c_l, valid=valid)
+        x = x + h
+        new_s.append(ncs)
+    if off < n_m:
+        xs = (
+            tslice(params["mlstm"], off, n_m),
+            tslice(params["mlstm_ln"], off, n_m),
+            tslice(m_cache, off, n_m) if m_cache is not None else None,
+        )
+        x, nc = _scan(mlstm_body, x, xs)
+        new_m.append(nc)
+
+    new_cache = {}
+    if m_cache is not None:
+        new_cache["mlstm"] = jax.tree.map(
+            lambda *ts: jnp.concatenate(ts, 0), *new_m
+        )
+        new_cache["slstm"] = jax.tree.map(lambda *ts: jnp.stack(ts, 0), *new_s)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def default_positions(cfg: ModelConfig, b: int, s: int):
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.rope_style == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def apply_train(cfg: ModelConfig, params, batch, *, backend="xla"):
+    """batch: {'inputs': [B,S] or [B,S,d], 'labels': [B,S], 'positions'?}.
+    Returns (loss, metrics)."""
+    inputs, labels = batch["inputs"], batch["labels"]
+    b, s = labels.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    logits, _, aux = forward(cfg, params, inputs, positions, mode="train",
+                             backend=backend)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    ll = jnp.take_along_axis(
+        logp, jnp.clip(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = -jnp.sum(ll * mask) / denom
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux,
+                  "tokens": jnp.sum(mask).astype(jnp.int32)}
+
+
+def apply_prefill(cfg: ModelConfig, params, cache, batch, *, backend="xla"):
+    """batch: inputs [B,S](ids) or [B,S,d], positions, page_table,
+    context_lens, query_lens. Returns (last_token_logits [B,V], new_cache)."""
+    meta = {k: batch[k] for k in ("page_table", "context_lens", "query_lens")}
+    logits, new_cache, _ = forward(
+        cfg, params, batch["inputs"], batch["positions"], mode="prefill",
+        cache=cache, meta=meta, backend=backend,
+    )
+    # gather the logits at each sequence's last valid position
+    last = jnp.clip(batch["query_lens"] - 1, 0)
+    idx = last[:, None, None]
+    out = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    return out, new_cache
+
+
+def apply_decode(cfg: ModelConfig, params, cache, batch, *, backend="xla"):
+    """batch: inputs [B,1] ids, positions [B,1], page_table, context_lens.
+    Returns (logits [B,V], new_cache)."""
+    meta = {k: batch[k] for k in ("page_table", "context_lens")}
+    logits, new_cache, _ = forward(
+        cfg, params, batch["inputs"], batch["positions"], mode="decode",
+        cache=cache, meta=meta, backend=backend,
+    )
+    return logits[:, 0], new_cache
+
+
+def init_abstract(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init, cfg), jax.random.key(0)
+    )

@@ -1,0 +1,314 @@
+"""SSM-family blocks: Mamba2 (zamba2 hybrid) and xLSTM (mLSTM + sLSTM).
+
+Serving contract: these blocks keep a *state cache* instead of KV pages
+(paper §4.6 motivates exactly this hybrid-cache coexistence). Ragged/dead
+positions are neutralized through the gates (dt=0 / f=1,i=0), which leaves
+the recurrent state untouched — the SSM analog of the paged kernels'
+static-grid masking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import mamba2 as m2k
+from repro.kernels import mlstm as mlk
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2)
+# ---------------------------------------------------------------------------
+
+
+def _m2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    assert s.num_heads * s.head_dim == d_inner, (s, d_inner)
+    conv_dim = d_inner + 2 * s.num_groups * s.state_dim
+    return d_inner, conv_dim
+
+
+def init_mamba2_block(cfg: ModelConfig, key):
+    s = cfg.ssm
+    dt_ = cfg.param_dtype
+    d_inner, conv_dim = _m2_dims(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    in_dim = 2 * d_inner + 2 * s.num_groups * s.state_dim + s.num_heads
+    return {
+        "in_proj": L.init_linear(k1, cfg.d_model, in_dim, dtype=dt_),
+        "conv_w": L.truncated_normal(k2, (s.conv_kernel, conv_dim),
+                                     s.conv_kernel**-0.5, dt_),
+        "a_log": jnp.zeros((s.num_heads,), jnp.float32),
+        "d_skip": jnp.ones((s.num_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((s.num_heads,), jnp.float32),
+        "norm": L.init_rms_norm(d_inner, dt_),
+        "out_proj": L.init_linear(k3, d_inner, cfg.d_model, dtype=dt_,
+                                  std=d_inner**-0.5),
+    }
+
+
+def mamba2_block(cfg: ModelConfig, p, u, *, mode: str, cache=None,
+                 valid=None, seq_lens=None):
+    """u [B, S, d]. cache: {'conv': [B, K-1, conv_dim], 'ssm': [B,H,N,P]}.
+    valid [B, S] bool, seq_lens [B] (serve modes).
+    Returns (y, new_cache_or_None)."""
+    s = cfg.ssm
+    b, slen, _ = u.shape
+    d_inner, conv_dim = _m2_dims(cfg)
+    gn = s.num_groups * s.state_dim
+
+    zxbcdt = L.linear(p["in_proj"], u)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt = zxbcdt[..., -s.num_heads :].astype(jnp.float32)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = L.causal_conv1d(xbc, p["conv_w"], conv_state,
+                                    seq_lens=seq_lens)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_inner].reshape(b, slen, s.num_heads, s.head_dim)
+    bmat = xbc[..., d_inner : d_inner + gn].reshape(
+        b, slen, s.num_groups, s.state_dim
+    )
+    cmat = xbc[..., d_inner + gn :].reshape(b, slen, s.num_groups, s.state_dim)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)  # state-neutral padding
+    a = -jnp.exp(p["a_log"])
+
+    if mode == "train":
+        chunk = min(s.chunk, slen)
+        while slen % chunk:
+            chunk //= 2
+        y, _ = m2k.mamba2_ssd_trainable(x, dt, a, bmat, cmat, p["d_skip"],
+                                        chunk=chunk)
+        new_cache = None
+    elif mode == "prefill":
+        chunk = min(s.chunk, slen)
+        while slen % chunk:
+            chunk //= 2
+        y, ssm_state = m2k.ssd_chunked(
+            x, dt, a, bmat, cmat, p["d_skip"], chunk=chunk,
+            initial_state=cache["ssm"],
+        )
+        new_cache = {"conv": new_conv, "ssm": ssm_state}
+    elif mode == "decode":
+        y, ssm_state = m2k.decode_step(
+            x[:, 0], dt[:, 0], a, bmat[:, 0], cmat[:, 0], p["d_skip"],
+            cache["ssm"],
+        )
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "ssm": ssm_state}
+    else:
+        raise ValueError(mode)
+
+    y = y.reshape(b, slen, d_inner)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    return constrain(out, "batch", "seq_sp", "embed"), new_cache
+
+
+def mamba2_cache_specs(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner, conv_dim = _m2_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch, s.conv_kernel - 1, conv_dim), cfg.param_dtype
+        ),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, s.num_heads, s.state_dim, s.head_dim), jnp.float32
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+
+def _xl_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    assert s.num_heads * s.head_dim == d_inner
+    return d_inner
+
+
+def init_mlstm_block(cfg: ModelConfig, key):
+    s = cfg.ssm
+    dt_ = cfg.param_dtype
+    d_inner = _xl_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": L.init_linear(ks[0], cfg.d_model, 2 * d_inner, dtype=dt_),
+        "conv_w": L.truncated_normal(ks[1], (s.conv_kernel, d_inner),
+                                     s.conv_kernel**-0.5, dt_),
+        "wq": L.init_linear(ks[2], d_inner, d_inner, dtype=dt_),
+        "wk": L.init_linear(ks[3], d_inner, d_inner, dtype=dt_),
+        "wv": L.init_linear(ks[4], d_inner, d_inner, dtype=dt_),
+        "w_gates": L.init_linear(ks[5], d_inner, 2 * s.num_heads, bias=True,
+                                 dtype=jnp.float32),
+        "norm": L.init_rms_norm(d_inner, dt_),
+        "out_proj": L.init_linear(ks[6], d_inner, cfg.d_model, dtype=dt_,
+                                  std=d_inner**-0.5),
+    }
+
+
+def mlstm_block(cfg: ModelConfig, p, u, *, mode: str, cache=None, valid=None,
+                seq_lens=None):
+    """cache: {'conv': [B,K-1,d_inner], 'c': [B,H,P,P], 'n': [B,H,P],
+    'm': [B,H]}."""
+    s = cfg.ssm
+    b, slen, _ = u.shape
+    d_inner = _xl_dims(cfg)
+    xz = L.linear(p["in_proj"], u)
+    x_in, z = xz[..., :d_inner], xz[..., d_inner:]
+    conv_state = cache["conv"] if cache is not None else None
+    x_conv, new_conv = L.causal_conv1d(x_in, p["conv_w"], conv_state,
+                                       seq_lens=seq_lens)
+    x_conv = jax.nn.silu(x_conv)
+
+    def heads(t):
+        return t.reshape(b, slen, s.num_heads, s.head_dim)
+
+    q = heads(L.linear(p["wq"], x_conv))
+    k = heads(L.linear(p["wk"], x_conv))
+    v = heads(L.linear(p["wv"], x_in))
+    gates = L.linear(p["w_gates"], x_conv.astype(jnp.float32))
+    ig, fg = gates[..., : s.num_heads], gates[..., s.num_heads :]
+    if valid is not None:  # state-neutral padding: f->1, i->0
+        ig = jnp.where(valid[..., None], ig, -30.0)
+        fg = jnp.where(valid[..., None], fg, 30.0)
+
+    if mode == "train":
+        chunk = min(s.chunk, slen)
+        while slen % chunk:
+            chunk //= 2
+        h, _ = mlk.mlstm_trainable(q, k, v, ig, fg, chunk=chunk)
+        new_cache = None
+    elif mode == "prefill":
+        chunk = min(s.chunk, slen)
+        while slen % chunk:
+            chunk //= 2
+        st = (cache["c"], cache["n"], cache["m"])
+        h, (c, n, m) = mlk.mlstm_chunked(q, k, v, ig, fg, chunk=chunk,
+                                         initial_state=st)
+        new_cache = {"conv": new_conv, "c": c, "n": n, "m": m}
+    elif mode == "decode":
+        st = (cache["c"], cache["n"], cache["m"])
+        h, (c, n, m) = mlk.decode_step(
+            q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0], st
+        )
+        h = h[:, None]
+        new_cache = {"conv": new_conv, "c": c, "n": n, "m": m}
+    else:
+        raise ValueError(mode)
+
+    h = h.reshape(b, slen, d_inner).astype(u.dtype)
+    h = L.rms_norm(p["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    out = L.linear(p["out_proj"], h)
+    return constrain(out, "batch", "seq_sp", "embed"), new_cache
+
+
+def mlstm_cache_specs(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner = _xl_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, d_inner),
+                                     cfg.param_dtype),
+        "c": jax.ShapeDtypeStruct((batch, s.num_heads, s.head_dim,
+                                   s.head_dim), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, s.num_heads, s.head_dim),
+                                  jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, s.num_heads), jnp.float32),
+    }
+
+
+def init_slstm_block(cfg: ModelConfig, key):
+    s = cfg.ssm
+    dt_ = cfg.param_dtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": L.init_linear(ks[0], d, 4 * d, bias=True, dtype=dt_),
+        # per-head block-diagonal recurrent weights
+        "r": L.truncated_normal(
+            ks[1], (4, s.num_heads, d // s.num_heads, d // s.num_heads),
+            (d // s.num_heads) ** -0.5, dt_,
+        ),
+        "norm": L.init_rms_norm(d, dt_),
+        "up": L.init_linear(ks[2], d, 2 * d, dtype=dt_),
+        "down": L.init_linear(ks[3], d, cfg.d_model, dtype=dt_, std=d**-0.5),
+    }
+
+
+def _slstm_cell(p, x_pre, state, nh):
+    """One sLSTM step. x_pre [B, 4d] preactivations (input part);
+    state (h, c, n, m) each [B, d] / [B, d] / [B, d] / [B, d]."""
+    h_prev, c_prev, n_prev, m_prev = state
+    b, d4 = x_pre.shape
+    d = d4 // 4
+    hh = h_prev.reshape(b, nh, d // nh)
+    rec = jnp.einsum("bhp,ghpq->bghq", hh.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(b, 4, d)
+    pre = x_pre.astype(jnp.float32).reshape(b, 4, d) + rec
+    z_t = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = pre[:, 2]
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    lf = -jax.nn.softplus(-f_t)  # log sigmoid
+    m_new = jnp.maximum(lf + m_prev, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(lf + m_prev - m_new)
+    c_new = fp * c_prev + ip * z_t
+    n_new = fp * n_prev + ip
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_block(cfg: ModelConfig, p, u, *, mode: str, cache=None, valid=None):
+    """cache: {'h','c','n','m'} each [B, d] fp32."""
+    s = cfg.ssm
+    b, slen, d = u.shape
+    x_pre = L.linear(p["w_in"], u)  # [B, S, 4d]
+    if valid is None:
+        valid = jnp.ones((b, slen), bool)
+
+    if cache is None:
+        st = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+              jnp.zeros((b, d), jnp.float32),
+              jnp.full((b, d), -jnp.inf, jnp.float32))
+    else:
+        st = (cache["h"], cache["c"], cache["n"], cache["m"])
+
+    def step(carry, inp):
+        x_t, v_t = inp
+        new = _slstm_cell(p, x_t, carry, s.num_heads)
+        # padded steps must leave the whole recurrent state untouched
+        keep = v_t[:, None]
+        out = tuple(jnp.where(keep, nv, ov) for nv, ov in zip(new, carry))
+        return out, out[0]
+
+    (h, c, n, m), hs = jax.lax.scan(
+        step, st, (jnp.moveaxis(x_pre, 1, 0), jnp.moveaxis(valid, 1, 0))
+    )
+    y = jnp.moveaxis(hs, 0, 1).astype(u.dtype)
+    y = L.rms_norm(p["norm"], y, cfg.norm_eps)
+    gu = L.linear(p["up"], y)
+    y = L.linear(p["down"], jax.nn.gelu(gu[..., :d]) * gu[..., d:])
+    new_cache = None if cache is None else {"h": h, "c": c, "n": n, "m": m}
+    return constrain(y, "batch", "seq_sp", "embed"), new_cache
+
+
+def slstm_cache_specs(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    f32 = jnp.float32
+    return {
+        "h": jax.ShapeDtypeStruct((batch, d), f32),
+        "c": jax.ShapeDtypeStruct((batch, d), f32),
+        "n": jax.ShapeDtypeStruct((batch, d), f32),
+        "m": jax.ShapeDtypeStruct((batch, d), f32),
+    }

@@ -1,0 +1,9 @@
+"""Hardware constants (TPU v5e target, per assignment)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB

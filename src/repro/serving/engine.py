@@ -1,0 +1,247 @@
+"""Continuous-batching inference engine (the vLLM-v1 analog, paper Fig. 1-2).
+
+Static-shape discipline = the TPU analog of CUDA-graph capture (paper §6.2):
+every jitted executable is keyed by a (batch-bucket, seq-bucket) pair; batch
+and prompt lengths are padded up to power-of-two buckets, so a steady-state
+serve loop replays a handful of compiled programs and never recompiles.
+`Engine.compile_events` counts captures (one per bucket), mirroring vLLM's
+one-graph-per-batch-size policy.
+
+Metadata computation (paper §6.1) happens host-side in numpy: page tables,
+context lens, query lens, slot positions; nothing shape-dynamic crosses into
+the compiled functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.paged.allocator import PageAllocator
+from repro.models import model as M
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler
+from repro.utils.misc import cdiv, next_power_of_2
+
+_SSM_CACHE_KEYS = ("mamba", "mlstm", "slstm")  # slot-indexed (axis 1) caches
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_seqs: int = 8,
+        num_pages: int = 128,
+        max_model_len: int = 2048,
+        max_prefill_tokens: int = 8192,
+        backend: str = "xla",
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.backend = backend
+        self.max_seqs = max_seqs
+        self.num_pages = num_pages
+        self.pages_per_seq = cdiv(max_model_len, cfg.page_size)
+        self.alloc = PageAllocator(num_pages, cfg.page_size)
+        self.sched = Scheduler(self.alloc, max_seqs=max_seqs,
+                               max_prefill_tokens=max_prefill_tokens)
+        self.cache = M.make_cache(cfg, max_seqs=max_seqs, num_pages=num_pages)
+        self.page_table = np.zeros((max_seqs, self.pages_per_seq), np.int32)
+        self.step_idx = 0
+        self.compile_events: list[tuple] = []  # (kind, b, s) per capture
+        self._key = jax.random.key(seed)
+        self._compiled: dict[tuple, object] = {}
+
+    # ------------------------------------------------------------------
+    # compiled executables ("graphs")
+    # ------------------------------------------------------------------
+
+    def _get_fn(self, kind: str, b: int, s: int):
+        key = (kind, b, s)
+        if key not in self._compiled:
+            self.compile_events.append(key)
+            if kind == "prefill":
+                self._compiled[key] = jax.jit(
+                    functools.partial(M.apply_prefill, self.cfg,
+                                      backend=self.backend)
+                )
+            elif kind == "decode":
+                self._compiled[key] = jax.jit(
+                    functools.partial(M.apply_decode, self.cfg,
+                                      backend=self.backend)
+                )
+            else:
+                raise ValueError(kind)
+        return self._compiled[key]
+
+    @functools.cached_property
+    def _sample_fn(self):
+        def sample(logits, key, temperature):
+            greedy = jnp.argmax(logits, axis=-1)
+            scaled = logits / jnp.maximum(temperature[:, None], 1e-6)
+            drawn = jax.random.categorical(key, scaled, axis=-1)
+            return jnp.where(temperature > 0, drawn, greedy).astype(jnp.int32)
+
+        return jax.jit(sample)
+
+    # ------------------------------------------------------------------
+    # request API
+    # ------------------------------------------------------------------
+
+    def add_request(self, req: Request) -> None:
+        assert req.num_prompt_tokens + req.max_new_tokens <= \
+            self.pages_per_seq * self.cfg.page_size, "exceeds max_model_len"
+        self.sched.add(req)
+
+    def generate(self, requests: Sequence[Request],
+                 max_steps: int = 10_000) -> list[Request]:
+        for r in requests:
+            self.add_request(r)
+        steps = 0
+        while self.sched.has_work and steps < max_steps:
+            self.step()
+            steps += 1
+        return list(requests)
+
+    # ------------------------------------------------------------------
+    # one engine step
+    # ------------------------------------------------------------------
+
+    def step(self) -> dict:
+        dec = self.sched.step(self.step_idx)
+        stats = {"prefill": len(dec.prefill_reqs),
+                 "decode": len(dec.decode_reqs),
+                 "preempted": len(dec.preempted)}
+        for req in dec.prefill_reqs:
+            row = np.zeros((self.pages_per_seq,), np.int32)
+            row[: len(req.pages)] = req.pages
+            self.page_table[req.slot] = row
+        for req in dec.decode_reqs:  # page growth
+            row = self.page_table[req.slot]
+            row[: len(req.pages)] = req.pages
+
+        if dec.prefill_reqs:
+            self._run_prefill(dec.prefill_reqs)
+        if dec.decode_reqs:
+            self._run_decode(dec.decode_reqs)
+
+        for req in list(self.sched.running):
+            if req.done:
+                self.sched.finish(req)
+                self.page_table[req.slot if req.slot is not None else 0] = 0
+        self.step_idx += 1
+        return stats
+
+    def _positions(self, pos: np.ndarray) -> jnp.ndarray:
+        p = jnp.asarray(pos, jnp.int32)
+        if self.cfg.rope_style == "mrope":
+            p = jnp.broadcast_to(p[None], (3,) + p.shape)
+        return p
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _run_prefill(self, reqs: list[Request]) -> None:
+        b = next_power_of_2(len(reqs))
+        max_len = max(r.num_prompt_tokens for r in reqs)
+        s = max(next_power_of_2(max_len), self.cfg.page_size)
+        tokens = np.zeros((b, s), np.int32)
+        qlens = np.zeros((b,), np.int32)
+        pt = np.zeros((b, self.pages_per_seq), np.int32)
+        pos = np.tile(np.arange(s, dtype=np.int32)[None], (b, 1))
+        for i, r in enumerate(reqs):
+            tokens[i, : r.num_prompt_tokens] = r.prompt
+            qlens[i] = r.num_prompt_tokens
+            pt[i] = self.page_table[r.slot]
+
+        cache_in = self._prefill_cache_view(b)
+        fn = self._get_fn("prefill", b, s)
+        batch = {
+            "inputs": jnp.asarray(tokens),
+            "positions": self._positions(pos),
+            "page_table": jnp.asarray(pt),
+            "context_lens": jnp.asarray(qlens),
+            "query_lens": jnp.asarray(qlens),
+        }
+        logits, new_cache = fn(self.params, cache_in, batch)
+        self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
+        temps = np.zeros((b,), np.float32)
+        for i, r in enumerate(reqs):
+            temps[i] = r.temperature
+        toks = self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
+        toks = np.asarray(toks)
+        for i, r in enumerate(reqs):
+            r.output.append(int(toks[i]))
+            r.context_len = r.num_prompt_tokens
+
+    def _run_decode(self, reqs: list[Request]) -> None:
+        b = self.max_seqs  # static decode batch (paper C5)
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.full((b, 1), -1, np.int32)
+        ctx = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        for r in reqs:
+            tokens[r.slot, 0] = r.output[-1] if r.output else r.prompt[-1]
+            pos[r.slot, 0] = r.total_len - 1
+            ctx[r.slot] = r.total_len
+            temps[r.slot] = r.temperature
+        fn = self._get_fn("decode", b, 1)
+        batch = {
+            "inputs": jnp.asarray(tokens),
+            "positions": self._positions(pos),
+            "page_table": jnp.asarray(self.page_table),
+            "context_lens": jnp.asarray(ctx),
+        }
+        logits, new_cache = fn(self.params, self.cache, batch)
+        self.cache = new_cache
+        toks = np.asarray(
+            self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
+        )
+        for r in reqs:
+            r.output.append(int(toks[r.slot]))
+            r.context_len = r.total_len - 1
+
+    # ------------------------------------------------------------------
+    # slot-indexed (SSM) cache plumbing
+    # ------------------------------------------------------------------
+
+    def _prefill_cache_view(self, b: int):
+        """Attn pages are global; SSM rows start from zeros for fresh
+        prefills (prefill always begins at context 0 in this engine)."""
+        view = {}
+        for k, v in self.cache.items():
+            if k == "attn":
+                view[k] = v
+            else:
+                zeros = jax.tree.map(
+                    lambda t: jnp.zeros(t.shape[:1] + (b,) + t.shape[2:],
+                                        t.dtype), v)
+                if k in ("mlstm", "slstm"):
+                    zeros["m"] = jnp.full_like(zeros["m"], -jnp.inf)
+                view[k] = zeros
+        return view
+
+    def _merge_prefill_cache(self, new_cache, slots: list[int]) -> None:
+        idx = jnp.asarray(slots, jnp.int32)
+        merged = {}
+        for k, v in new_cache.items():
+            if k == "attn":
+                merged[k] = v
+            else:
+                merged[k] = jax.tree.map(
+                    lambda full, new: full.at[:, idx].set(
+                        new[:, : len(slots)]),
+                    self.cache[k], v,
+                )
+        for k in self.cache:
+            if k not in merged:
+                merged[k] = self.cache[k]
+        self.cache = merged

@@ -1,0 +1,50 @@
+"""Request lifecycle objects for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Sequence
+
+_ids = itertools.count()
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_token: int | None = None
+    temperature: float = 0.0  # 0 = greedy
+    req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    state: State = State.WAITING
+    output: list[int] = dataclasses.field(default_factory=list)
+    slot: int | None = None  # batch slot while RUNNING
+    pages: list[int] = dataclasses.field(default_factory=list)
+    context_len: int = 0  # tokens currently in the cache
+    arrival_step: int = 0
+
+    @property
+    def num_prompt_tokens(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        if self.eos_token is not None and self.output \
+                and self.output[-1] == self.eos_token:
+            return True
+        return len(self.output) >= self.max_new_tokens
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + len(self.output)
+
+
+def make_requests(prompts: Sequence[Sequence[int]], **kw) -> list[Request]:
+    return [Request(prompt=list(p), **kw) for p in prompts]

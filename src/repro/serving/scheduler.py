@@ -1,0 +1,111 @@
+"""Continuous-batching scheduler (vLLM-v1 analog, paper §3/§6.1).
+
+Policy per step (decode-priority, matching vLLM's behavior that the paper's
+Fig. 6c/6d analysis leans on):
+  1. every RUNNING request decodes one token; if it crosses a page boundary
+     it needs one new page — if the pool is exhausted, preempt the youngest
+     running request (free its pages, requeue) until the rest fit;
+  2. admit WAITING requests into free slots while (a) a batch slot is free,
+     (b) their prompt's pages fit, (c) the prefill token budget holds.
+
+Outputs host-side ScheduleDecision objects; all array metadata is built by
+the engine (paper §6.1 'computation of metadata').
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.paged.allocator import PageAllocator
+from repro.serving.request import Request, State
+
+
+@dataclasses.dataclass
+class ScheduleDecision:
+    decode_reqs: list[Request]
+    prefill_reqs: list[Request]
+    preempted: list[Request]
+
+
+class Scheduler:
+    def __init__(self, allocator: PageAllocator, *, max_seqs: int,
+                 max_prefill_tokens: int = 8192):
+        self.alloc = allocator
+        self.max_seqs = max_seqs
+        self.max_prefill_tokens = max_prefill_tokens
+        self.waiting: list[Request] = []
+        self.running: list[Request] = []
+        self._free_slots = list(range(max_seqs - 1, -1, -1))
+
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def _free_request(self, req: Request) -> None:
+        self.alloc.free(req.pages)
+        req.pages = []
+        if req.slot is not None:
+            self._free_slots.append(req.slot)
+            req.slot = None
+
+    def finish(self, req: Request) -> None:
+        req.state = State.FINISHED
+        self._free_request(req)
+        self.running.remove(req)
+
+    def _preempt_one(self) -> Request | None:
+        if not self.running:
+            return None
+        victim = max(self.running, key=lambda r: r.arrival_step)
+        victim.state = State.PREEMPTED
+        victim.prompt = victim.prompt + victim.output  # recompute on resume
+        victim.output = []
+        victim.context_len = 0
+        self._free_request(victim)
+        self.running.remove(victim)
+        self.waiting.insert(0, victim)
+        return victim
+
+    def step(self, step_idx: int) -> ScheduleDecision:
+        preempted: list[Request] = []
+
+        # --- 1. decode pass: grow pages, preempting if needed -------------
+        decode_reqs: list[Request] = []
+        for req in list(self.running):
+            need = self.alloc.pages_needed(req.total_len + 1) - len(req.pages)
+            while need > self.alloc.free_pages:
+                victim = self._preempt_one()
+                if victim is None:
+                    break
+                preempted.append(victim)
+                if victim is req:
+                    break
+            if req.state is not State.RUNNING:
+                continue  # got preempted itself
+            if need > 0:
+                req.pages.extend(self.alloc.allocate(need))
+            decode_reqs.append(req)
+
+        # --- 2. admit prefills ---------------------------------------------
+        prefill_reqs: list[Request] = []
+        budget = self.max_prefill_tokens
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            n_pages = self.alloc.pages_needed(req.num_prompt_tokens)
+            if req.num_prompt_tokens > budget:
+                break
+            if not self.alloc.can_allocate(n_pages):
+                break
+            self.waiting.pop(0)
+            req.pages = self.alloc.allocate(n_pages)
+            req.slot = self._free_slots.pop()
+            req.state = State.RUNNING
+            req.arrival_step = step_idx
+            req.context_len = 0
+            budget -= req.num_prompt_tokens
+            self.running.append(req)
+            prefill_reqs.append(req)
+
+        return ScheduleDecision(decode_reqs, prefill_reqs, preempted)

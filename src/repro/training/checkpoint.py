@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing (no orbax in this environment).
+
+Layout: <dir>/step_<N>/
+  manifest.json   {step, leaf paths, shapes, dtypes, data_state, flags}
+  arrays.npz      one entry per pytree leaf (path-keyed)
+
+Guarantees:
+  * atomic: written to step_<N>.tmp then os.rename'd — a crash mid-write
+    never corrupts the latest valid checkpoint;
+  * async: `save_async` hands the (host-copied) state to a writer thread so
+    the train loop continues; `wait()` joins before the next save;
+  * keep_last_n garbage collection;
+  * elastic restore: leaves are stored unsharded; re-sharding to a different
+    mesh happens when the restored pytree is device_put with the new
+    topology's shardings (multi-host note in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+from repro.training.data import DataState
+
+
+def _flatten(state):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    return {jax.tree_util.keystr(p): np.asarray(v) for p, v in flat}, treedef
+
+
+def save(ckpt_dir: str, state, *, step: int, data_state: DataState | None = None,
+         keep_last_n: int = 3, extra: dict | None = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays, _ = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "data_state": dataclasses.asdict(data_state) if data_state else None,
+        "extra": extra or {},
+        "format": 1,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _gc(ckpt_dir, keep_last_n)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last_n: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep_last_n]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, state_template, *, step: int | None = None):
+    """Returns (state, step, data_state). `state_template` supplies the
+    pytree structure (e.g. from jax.eval_shape of the init fn)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoint in {ckpt_dir}"
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    leaves = []
+    for p, tmpl in flat:
+        key = jax.tree_util.keystr(p)
+        arr = arrays[key]
+        assert list(arr.shape) == list(tmpl.shape), (key, arr.shape, tmpl.shape)
+        leaves.append(arr)
+    state = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(state_template), leaves
+    )
+    ds = manifest.get("data_state")
+    data_state = DataState(**ds) if ds else None
+    return state, manifest["step"], data_state
+
+
+class AsyncCheckpointer:
+    """One in-flight save at a time; host copy happens on the caller thread
+    (cheap device->host for the CPU/TPU-slice case), npz write in background."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self.last_path: str | None = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, ckpt_dir: str, state, *, step: int,
+                   data_state: DataState | None = None,
+                   keep_last_n: int = 3) -> None:
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # snapshot now
+
+        def _work():
+            self.last_path = save(ckpt_dir, host_state, step=step,
+                                  data_state=data_state,
+                                  keep_last_n=keep_last_n)
+
+        self._thread = threading.Thread(target=_work, daemon=True)
+        self._thread.start()

@@ -1,0 +1,59 @@
+"""Pure-pytree AdamW + schedules (no optax in this environment)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.misc import global_norm
+
+
+def adamw_init(params):
+    zeros = lambda p: jax.tree.map(  # noqa: E731
+        lambda x: jnp.zeros(x.shape, jnp.float32), p
+    )
+    return {"mu": zeros(params), "nu": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return base_lr * warm * cos
+
+
+def adamw_update(grads, opt_state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_opt_state, metrics). Grad-norm clipping is
+    global; weight decay is decoupled (AdamW)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = opt_state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1 - b1**cf
+    bc2 = 1 - b2**cf
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        step_ = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+        step_ = step_ + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), mu, nu
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, mu, nu, p)
+           for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return (
+        new_p,
+        {"mu": new_mu, "nu": new_nu, "count": count},
+        {"grad_norm": gnorm, "lr": lr},
+    )

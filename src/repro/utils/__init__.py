@@ -1,0 +1,8 @@
+from repro.utils.misc import (  # noqa: F401
+    cdiv,
+    round_up,
+    next_power_of_2,
+    tree_size_bytes,
+    tree_flatten_with_paths,
+    pretty_bytes,
+)

@@ -1,0 +1,58 @@
+"""Small shared utilities (no jax device state touched at import)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def next_power_of_2(x: int) -> int:
+    if x <= 1:
+        return 1
+    return 1 << (int(x) - 1).bit_length()
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(
+        np.prod(x.shape) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+def tree_flatten_with_paths(tree):
+    """[(dotted.path, leaf)] for a pytree of dict/list/tuple/namedtuple."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out
+
+
+def pretty_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree) if hasattr(x, "shape"))
+
+
+def astype_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

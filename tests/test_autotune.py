@@ -1,0 +1,91 @@
+"""Autotune subsystem: cost-model sanity (paper Fig. 6 structure), tree
+fitting, export/load roundtrip into the dispatch heuristics."""
+import json
+import os
+import tempfile
+
+from repro.autotune.costmodel import Scenario, decode_time, prefill_time
+from repro.autotune.microbench import DECODE_SPACE, scenario_grid, sweep
+from repro.autotune.tune import fit_tree, flatten, regret_report, \
+    tune_and_export
+from repro.core.attention import heuristics as H
+
+
+def _decode_scenario(bs, ctx, group=4, page=16):
+    return Scenario(
+        num_seqs=bs, context_lens=(ctx,) * bs, query_lens=(1,) * bs,
+        num_q_heads=8 * group, num_kv_heads=8, head_dim=128, page_size=page,
+    )
+
+
+def test_costmodel_reproduces_paper_structure():
+    """The paper's Fig. 6 qualitative findings must hold in the model."""
+    # (1) baseline is far behind on GQA models (KV re-fetch per q head)
+    sc = _decode_scenario(16, 8192)
+    assert decode_time(sc, variant="baseline", tile=16) > \
+        3 * decode_time(sc, variant="gqa", tile=16)
+    # (2) segmented wins small-batch long-context decode...
+    small_long = _decode_scenario(1, 32768)
+    assert decode_time(small_long, variant="segmented", tile=16,
+                       num_segments=16) < \
+        decode_time(small_long, variant="gqa", tile=16)
+    # (3) ...but not large-batch short-context
+    big_short = _decode_scenario(128, 256)
+    assert decode_time(big_short, variant="gqa", tile=16) <= \
+        decode_time(big_short, variant="segmented", tile=16, num_segments=16)
+    # (4) VMEM budget invalidates oversized tiles
+    wide = Scenario(num_seqs=1, context_lens=(1024,), query_lens=(1,),
+                    num_q_heads=128, num_kv_heads=1, head_dim=576,
+                    page_size=64)
+    assert decode_time(wide, variant="gqa", tile=64) == float("inf")
+    assert decode_time(wide, variant="gqa", tile=16) < float("inf")
+    # (5) prefill cost grows with context
+    short = Scenario(num_seqs=4, context_lens=(1024,) * 4,
+                     query_lens=(1024,) * 4, num_q_heads=32, num_kv_heads=8,
+                     head_dim=128, page_size=16)
+    long_ = Scenario(num_seqs=4, context_lens=(8192,) * 4,
+                     query_lens=(8192,) * 4, num_q_heads=32, num_kv_heads=8,
+                     head_dim=128, page_size=16)
+    assert prefill_time(long_, block_q=16, tile=16) > \
+        prefill_time(short, block_q=16, tile=16)
+
+
+def test_tree_fit_and_regret():
+    scenarios = [s for s in scenario_grid(seed=1) if s.decode_share == 1.0]
+    results = sweep(scenarios, DECODE_SPACE)
+    tree = fit_tree(results, DECODE_SPACE)
+    rep = regret_report(results, DECODE_SPACE, tree)
+    assert rep["tuned_s"] <= rep["untuned_best_fixed_s"] * 1.0001
+    assert rep["tuned_vs_oracle_overhead"] < 0.25
+    flat = flatten(tree, DECODE_SPACE)
+    assert all(isinstance(c, dict) and "variant" in cfg
+               for c, cfg in flat)
+
+
+def test_export_load_dispatch_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tree.json")
+        tune_and_export(path, num_q_heads=32, num_kv_heads=8, head_dim=128)
+        raw = json.load(open(path))
+        assert raw["decode_tree"]
+        H.load(path)
+        try:
+            cfg = H.decode_config(H.BatchProfile(
+                num_seqs=1, max_context=32768, group=4, page_size=16))
+            assert cfg.variant in ("gqa", "segmented", "baseline")
+            # long-context small batch should pick the parallel tiled
+            # softmax (paper §4.5)
+            assert cfg.variant == "segmented"
+        finally:
+            H.reset()
+
+
+def test_default_heuristics_match_paper_shape():
+    small_long = H.BatchProfile(num_seqs=1, max_context=32768, group=4,
+                                page_size=16)
+    big = H.BatchProfile(num_seqs=64, max_context=512, group=4, page_size=16)
+    assert H.default_decode_config(small_long).variant == "segmented"
+    assert H.default_decode_config(big).variant == "gqa"
+    assert H.default_prefill_config(H.BatchProfile(
+        num_seqs=2, max_context=8192, group=4, page_size=16,
+        avg_query_len=8192)).block_q == 32
