@@ -1,0 +1,16 @@
+# Tier-1 verification (ROADMAP.md): the whole suite, fail-fast.
+PY ?= python
+
+.PHONY: test test-full bench deps-dev
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-full:
+	PYTHONPATH=src $(PY) -m pytest -q
+
+bench:
+	PYTHONPATH=src $(PY) benchmarks/run.py
+
+deps-dev:
+	$(PY) -m pip install -r requirements-dev.txt

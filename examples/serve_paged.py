@@ -26,6 +26,11 @@ def main():
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--prefix-caching", action="store_true",
+                    help="content-addressed KV page reuse across requests")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend a common N-token system prompt to every "
+                         "request (the prefix-cache hot path)")
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch]).replace(dtype="float32")
@@ -44,10 +49,12 @@ def main():
           f"{rep['tuned_vs_untuned_speedup']:.2f}x)")
 
     eng = Engine(cfg, params, max_seqs=4, num_pages=96, max_model_len=256,
-                 backend=args.backend)
+                 backend=args.backend,
+                 enable_prefix_caching=args.prefix_caching)
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(1, cfg.vocab_size,
-                                 size=int(rng.integers(5, 60))))
+    shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
+    prompts = [shared + list(rng.integers(1, cfg.vocab_size,
+                                          size=int(rng.integers(5, 60))))
                for _ in range(args.requests)]
     reqs = make_requests(prompts, max_new_tokens=args.max_new_tokens)
     t0 = time.perf_counter()
@@ -67,6 +74,12 @@ def main():
           f"({total / dt:.1f} tok/s on this host)")
     print(f"graph captures: {len(eng.compile_events)} "
           f"(static decode batch + pow2 prefill buckets)")
+    if eng.prefix_cache is not None:
+        st = eng.prefix_cache.stats()
+        print(f"prefix cache: {st['cache_hits']} hits / "
+              f"{st['cache_misses']} misses, "
+              f"{eng.cached_prefill_tokens} prompt tokens reused, "
+              f"{st['cache_evictions']} evictions")
     heuristics.reset()
 
 

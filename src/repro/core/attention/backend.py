@@ -19,6 +19,27 @@ from repro.core.paged.kv_cache import gather_pages
 from repro.kernels.flash_attention.ref import flash_attention_xla
 from repro.kernels.paged_attention import ops as paged_ops
 
+_NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _osm_update(acc, mm, ll, sc, mask, v_blk, pv_spec: str):
+    """One masked online-softmax block update (shared by the streaming
+    decode and cached-prefill scan paths — the math must stay identical)."""
+    sc = jnp.where(mask, sc, _NEG)
+    m_new = jnp.maximum(mm, jnp.max(sc, -1))
+    m_safe = jnp.where(m_new <= _NEG, 0.0, m_new)
+    pp = jnp.where(mask, jnp.exp(sc - m_safe[..., None]), 0.0)
+    alpha = jnp.where(mm <= _NEG, 0.0, jnp.exp(mm - m_safe))
+    ll = ll * alpha + jnp.sum(pp, -1)
+    acc = acc * alpha[..., None] + jnp.einsum(
+        pv_spec, pp, v_blk.astype(jnp.float32))
+    return acc, m_new, ll
+
+
+def _osm_finalize(acc, ll):
+    ll = jnp.where(ll == 0.0, 1.0, ll)
+    return acc / ll[..., None]
+
 
 def decode_attention(
     backend: str,
@@ -111,12 +132,11 @@ def decode_attention_blockscan(
     pad = nblk * ppb - np_
     pt = jnp.pad(page_table.astype(jnp.int32), ((0, 0), (0, pad)))
     pt_b = jnp.moveaxis(pt.reshape(s_, nblk, ppb), 1, 0)  # [nblk, S, ppb]
-    neg = -0.7 * float(jnp.finfo(jnp.float32).max)
     qf = q.astype(jnp.float32).reshape(s_, hkv, group, dk)
     dv = v_dim if v_pages is None else v_pages.shape[-1]
 
     acc0 = jnp.zeros((s_, hkv, group, dv), jnp.float32)
-    m0 = jnp.full((s_, hkv, group), neg, jnp.float32)
+    m0 = jnp.full((s_, hkv, group), _NEG, jnp.float32)
     l0 = jnp.zeros((s_, hkv, group), jnp.float32)
 
     def step(carry, xs):
@@ -131,14 +151,8 @@ def decode_attention_blockscan(
                         k_blk.astype(jnp.float32)) * scale
         kv_pos = blk * (ppb * ps) + jnp.arange(ppb * ps)
         mask = (kv_pos[None, :] < context_lens[:, None])[:, None, None, :]
-        sc = jnp.where(mask, sc, neg)
-        m_new = jnp.maximum(mm, jnp.max(sc, -1))
-        m_safe = jnp.where(m_new <= neg, 0.0, m_new)
-        pp = jnp.where(mask, jnp.exp(sc - m_safe[..., None]), 0.0)
-        alpha = jnp.where(mm <= neg, 0.0, jnp.exp(mm - m_safe))
-        ll = ll * alpha + jnp.sum(pp, -1)
-        acc = acc * alpha[..., None] + jnp.einsum(
-            "shgk,skhd->shgd", pp, v_blk.astype(jnp.float32))
+        acc, m_new, ll = _osm_update(acc, mm, ll, sc, mask, v_blk,
+                                     "shgk,skhd->shgd")
         return (acc, m_new, ll), None
 
     from repro.kernels.flash_attention import ref as _fref
@@ -146,20 +160,20 @@ def decode_attention_blockscan(
         step, (acc0, m0, l0), (pt_b, jnp.arange(nblk)),
         unroll=True if _fref.UNROLL_SCANS else 1,
     )
-    ll = jnp.where(ll == 0.0, 1.0, ll)
-    out = acc / ll[..., None]
-    return out.reshape(s_, hq, dv).astype(q.dtype)
+    return _osm_finalize(acc, ll).reshape(s_, hq, dv).astype(q.dtype)
 
 
 def _pick_kv_block(length: int, target: int = 1024,
                    max_blocks: int = 64) -> int:
-    """KV scan granularity: ~1k tokens, capped at 64 scan steps so the
-    long-context (500k) cells stay compilable when the roofline mode
-    unrolls the scan."""
+    """KV scan granularity: ~1k tokens, capped (best-effort) at 64 scan
+    steps so the long-context (500k) cells stay compilable when the
+    roofline mode unrolls the scan. The result ALWAYS divides `length`;
+    the block cap yields rather than break divisibility (e.g. a 65-page
+    table scans in 65 steps instead of crashing the reshape)."""
     kv_block = min(target, length)
     while length % kv_block:
         kv_block //= 2
-    while length // kv_block > max_blocks:
+    while length // kv_block > max_blocks and length % (kv_block * 2) == 0:
         kv_block *= 2
     return min(kv_block, length)
 
@@ -203,6 +217,96 @@ def prefill_attention_uniform(
         q, k_new, v_new, causal=True, scale=scale, kv_block=kv_block,
         kv_len=query_lens,
     )
+
+
+def prefill_attention_cached(
+    backend: str,
+    q: jax.Array,  # [B, S, Hq, Dk] (the uncached suffix chunk, padded)
+    query_lens: jax.Array,  # [B] suffix lengths (<= S)
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    context_lens: jax.Array,  # [B] cached + suffix tokens
+    *,
+    scale: float | None = None,
+    kernel_cfg: heuristics.KernelConfig | None = None,
+) -> jax.Array:
+    """Uniform-layout prefill over sequences WITH prior cached context
+    (context_lens = num_cached + query_lens; the prefix-cache path). The
+    suffix KV is already written to the pages, so BOTH backends read the
+    full context back from the pages:
+      pallas  the paper's Q-Block ragged kernel via the stride-S trick
+              (uniform padded layout == ragged layout with stride-s starts)
+      xla     page gather + online-softmax scan with PER-SEQUENCE causal
+              offsets (flash_attention_xla only supports a static scalar
+              q_offset, and cached lengths vary across the batch)."""
+    b, s, hq, dk = q.shape
+    if backend == "pallas":
+        cfg = kernel_cfg or heuristics.KernelConfig("gqa")
+        assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
+        qsl = jnp.arange(b + 1, dtype=jnp.int32) * s
+        out = paged_ops.paged_attention_prefill(
+            q.reshape(b * s, hq, dk), k_pages[:, 0], v_pages[:, 0],
+            page_table, context_lens, qsl, query_lens.astype(jnp.int32),
+            block_q=cfg.block_q, tile=cfg.tile, scale=scale,
+        )
+        return out.reshape(b, s, hq, -1)
+    k = gather_pages(k_pages, page_table)  # [B, Np*ps, Hkv, Dk]
+    v = gather_pages(v_pages, page_table)
+    return _chunked_flash_xla(
+        q, k, v, context_lens - query_lens, context_lens, scale=scale,
+    )
+
+
+def _chunked_flash_xla(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D] dense (gathered) context
+    v: jax.Array,
+    q_start: jax.Array,  # [B] absolute position of each seq's q row 0
+    kv_len: jax.Array,  # [B] valid context lengths
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Online-softmax flash scan with per-sequence causal offsets: q row j
+    of sequence b sits at absolute position q_start[b] + j and attends kv
+    positions <= that (and < kv_len[b]). Inference-only (no VJP)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    kv_block = _pick_kv_block(skv)
+    nkv = skv // kv_block
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    q_pos = q_start[:, None] + jnp.arange(sq)[None, :]  # [B, Sq]
+    kb = jnp.moveaxis(k.reshape(b, nkv, kv_block, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nkv, kv_block, hkv, dv), 1, 0)
+
+    acc0 = jnp.zeros((b, sq, hkv, g, dv), jnp.float32)
+    m0 = jnp.full((b, sq, hkv, g), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+
+    def step(carry, xs):
+        acc, mm, ll = carry
+        kc, vc, blk = xs
+        sc = jnp.einsum("bqhgd,bkhd->bqhgk", qf,
+                        kc.astype(jnp.float32)) * scale
+        kv_pos = blk * kv_block + jnp.arange(kv_block)
+        mask = (
+            (kv_pos[None, None, :] <= q_pos[:, :, None])
+            & (kv_pos[None, None, :] < kv_len[:, None, None])
+        )[:, :, None, None, :]
+        acc, m_new, ll = _osm_update(acc, mm, ll, sc, mask, vc,
+                                     "bqhgk,bkhd->bqhgd")
+        return (acc, m_new, ll), None
+
+    from repro.kernels.flash_attention import ref as _fref
+    (acc, _, ll), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kb, vb, jnp.arange(nkv)),
+        unroll=True if _fref.UNROLL_SCANS else 1,
+    )
+    return _osm_finalize(acc, ll).reshape(b, sq, hq, dv).astype(q.dtype)
 
 
 def prefill_attention_ragged(

@@ -58,9 +58,13 @@ def pipeline_apply(
             return (nxt, outs), None
 
         # the carry becomes device-varying after ppermute; mark it as such
-        buf0 = jax.lax.pcast(jnp.zeros_like(x_local[0]), (axis,),
-                             to="varying")
-        outs0 = jax.lax.pcast(jnp.zeros_like(x_local), (axis,), to="varying")
+        # (jax<0.7 has no pcast/varying-axes tracking — plain zeros suffice)
+        pcast = getattr(jax.lax, "pcast", None)
+        buf0 = jnp.zeros_like(x_local[0])
+        outs0 = jnp.zeros_like(x_local)
+        if pcast is not None:
+            buf0 = pcast(buf0, (axis,), to="varying")
+            outs0 = pcast(outs0, (axis,), to="varying")
         (_, outs), _ = jax.lax.scan(
             tick, (buf0, outs0), jnp.arange(ticks)
         )

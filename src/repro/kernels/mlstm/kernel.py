@@ -14,6 +14,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 compat: TPUCompilerParams was renamed CompilerParams upstream
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _dot(a, b, trans_a=False, trans_b=False):
     dn = (((0 if trans_a else 1,), (1 if trans_b else 0,)), ((), ()))
@@ -127,7 +131,7 @@ def mlstm_chunked_fwd(
             pltpu.VMEM((1, p), jnp.float32),
             pltpu.VMEM((1, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -45,6 +45,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 compat: TPUCompilerParams was renamed CompilerParams upstream
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 _NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
@@ -204,7 +208,7 @@ def paged_decode(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -328,7 +332,7 @@ def paged_decode_segmented(
             ],
         ),
         out_shape=out_shapes,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -371,7 +375,7 @@ def segment_reduce(
         ],
         out_specs=pl.BlockSpec((1, 1, m, d), lambda s, h: (s, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((s_, hkv, m, d), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
@@ -495,7 +499,7 @@ def paged_prefill_qblock(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct(q_packed.shape, q_packed.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -114,16 +114,25 @@ def attention(cfg: ModelConfig, p, x, positions, *, mode: str,
         pt = meta["page_table"]
         ctx = meta["context_lens"]
         num_pages, ps = cache["k_pages"].shape[2], cache["k_pages"].shape[3]
-        if mode == "prefill":
+        if mode in ("prefill", "prefill_cached"):
             qlens = meta["query_lens"]
             pos_abs = positions if positions.ndim == 2 else positions[0]
             valid = (jnp.arange(s)[None, :] < qlens[:, None])
             slots = physical_slots(pt, pos_abs, valid, ps, num_pages)
             kp = write_pages(cache["k_pages"], k, slots)
             vp = write_pages(cache["v_pages"], v, slots)
-            o = attn_backend.prefill_attention_uniform(
-                backend, q, k, v, qlens, kp, vp, pt, ctx, scale=scale,
-            )
+            if mode == "prefill_cached":
+                # prefix-cache resume: positions are offset by the cached
+                # context (context_lens = cached + chunk); attend over the
+                # pages, which hold the shared prefix + the chunk just
+                # written above.
+                o = attn_backend.prefill_attention_cached(
+                    backend, q, qlens, kp, vp, pt, ctx, scale=scale,
+                )
+            else:
+                o = attn_backend.prefill_attention_uniform(
+                    backend, q, k, v, qlens, kp, vp, pt, ctx, scale=scale,
+                )
             new_cache = {"k_pages": kp, "v_pages": vp}
         elif mode == "decode":
             pos_abs = positions if positions.ndim == 2 else positions[0]

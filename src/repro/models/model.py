@@ -504,6 +504,28 @@ def apply_prefill(cfg: ModelConfig, params, cache, batch, *, backend="xla"):
     return out, new_cache
 
 
+def apply_prefill_cached(cfg: ModelConfig, params, cache, batch, *,
+                         backend="xla"):
+    """Prefix-cache resume prefill: only the UNCACHED suffix of each prompt
+    is embedded/computed (batch['inputs'] [B,S] holds suffix ids, positions
+    are absolute, context_lens = cached + suffix, query_lens = suffix).
+    Attention writes suffix KV into the tail pages and attends over the
+    full paged context via the chunked path. Attention-family models only
+    (SSM/hybrid recurrent state is not page-addressable).
+    Returns (last_token_logits [B,V], new_cache)."""
+    assert cfg.family in ("dense", "moe", "audio", "vlm") \
+        and not cfg.mla.kv_lora_rank, \
+        f"prefix caching unsupported for family={cfg.family!r}/MLA"
+    meta = {k: batch[k] for k in ("page_table", "context_lens", "query_lens")}
+    logits, new_cache, _ = forward(
+        cfg, params, batch["inputs"], batch["positions"],
+        mode="prefill_cached", cache=cache, meta=meta, backend=backend,
+    )
+    last = jnp.clip(batch["query_lens"] - 1, 0)
+    out = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return out, new_cache
+
+
 def apply_decode(cfg: ModelConfig, params, cache, batch, *, backend="xla"):
     """batch: inputs [B,1] ids, positions [B,1], page_table, context_lens.
     Returns (logits [B,V], new_cache)."""

@@ -19,6 +19,19 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
 
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax<0.6: experimental location
+    from jax.experimental.shard_map import shard_map as _shard_map
+# the rep-check kwarg was renamed check_rep -> check_vma independently of
+# the move to jax.shard_map; gate on the actual signature
+import inspect as _inspect
+_SHARD_MAP_NOCHECK = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
+
 
 def init_moe(cfg: ModelConfig, key):
     m = cfg.moe
@@ -166,12 +179,12 @@ def moe_ffn_dropless_ep(cfg: ModelConfig, p, x):
             ys.astype(jnp.float32) * w_flat[:, None])
         return jax.lax.psum(y, "model").reshape(xl.shape)
 
-    y = jax.shard_map(
+    y = _shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_axes or None), P(), P("model"), P("model"),
                   P("model")),
         out_specs=P(batch_axes or None),
-        check_vma=False,
+        **_SHARD_MAP_NOCHECK,
     )(x, p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"])
     if "shared" in p:
         y = y + L.mlp(p["shared"], x.reshape(-1, d)).astype(y.dtype

@@ -10,6 +10,15 @@ one-graph-per-batch-size policy.
 Metadata computation (paper §6.1) happens host-side in numpy: page tables,
 context lens, query lens, slot positions; nothing shape-dynamic crosses into
 the compiled functions.
+
+Prefix caching (`enable_prefix_caching=True`): the allocator is ref-counted
+and a content-addressed `PrefixCache` indexes every full written page by its
+hash-chained key. Admission reuses the longest cached prefix, and requests
+with a nonzero cached prefix run through a dedicated cached-context prefill
+executable (`prefill_cached` kind) that embeds/computes ONLY the uncached
+suffix and attends over the full paged context (context_lens = cached +
+chunk). Attention-family models only; outputs are equivalent to the
+uncached engine while prefilling strictly fewer tokens.
 """
 from __future__ import annotations
 
@@ -21,8 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.paged.allocator import PageAllocator
+from repro.core.paged.allocator import RefCountedPageAllocator
 from repro.models import model as M
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler
 from repro.utils.misc import cdiv, next_power_of_2
@@ -41,6 +51,7 @@ class Engine:
         max_model_len: int = 2048,
         max_prefill_tokens: int = 8192,
         backend: str = "xla",
+        enable_prefix_caching: bool = False,
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -49,12 +60,22 @@ class Engine:
         self.max_seqs = max_seqs
         self.num_pages = num_pages
         self.pages_per_seq = cdiv(max_model_len, cfg.page_size)
-        self.alloc = PageAllocator(num_pages, cfg.page_size)
+        self.alloc = RefCountedPageAllocator(num_pages, cfg.page_size)
+        self.prefix_cache = None
+        if enable_prefix_caching:
+            assert cfg.family in ("dense", "moe", "audio", "vlm") \
+                and not cfg.mla.kv_lora_rank, (
+                    "prefix caching needs page-addressable context "
+                    f"(unsupported for family={cfg.family!r}/MLA)")
+            self.prefix_cache = PrefixCache(self.alloc, cfg.page_size)
         self.sched = Scheduler(self.alloc, max_seqs=max_seqs,
-                               max_prefill_tokens=max_prefill_tokens)
+                               max_prefill_tokens=max_prefill_tokens,
+                               prefix_cache=self.prefix_cache)
         self.cache = M.make_cache(cfg, max_seqs=max_seqs, num_pages=num_pages)
         self.page_table = np.zeros((max_seqs, self.pages_per_seq), np.int32)
         self.step_idx = 0
+        self.prefilled_tokens = 0  # uncached tokens actually computed
+        self.cached_prefill_tokens = 0  # tokens skipped via the prefix cache
         self.compile_events: list[tuple] = []  # (kind, b, s) per capture
         self._key = jax.random.key(seed)
         self._compiled: dict[tuple, object] = {}
@@ -70,6 +91,11 @@ class Engine:
             if kind == "prefill":
                 self._compiled[key] = jax.jit(
                     functools.partial(M.apply_prefill, self.cfg,
+                                      backend=self.backend)
+                )
+            elif kind.startswith("prefill_cached"):
+                self._compiled[key] = jax.jit(
+                    functools.partial(M.apply_prefill_cached, self.cfg,
                                       backend=self.backend)
                 )
             elif kind == "decode":
@@ -116,9 +142,18 @@ class Engine:
 
     def step(self) -> dict:
         dec = self.sched.step(self.step_idx)
+        new_tokens = sum(r.num_prompt_tokens - r.num_cached_tokens
+                         for r in dec.prefill_reqs)
+        cached_tokens = sum(r.num_cached_tokens for r in dec.prefill_reqs)
+        self.prefilled_tokens += new_tokens
+        self.cached_prefill_tokens += cached_tokens
         stats = {"prefill": len(dec.prefill_reqs),
                  "decode": len(dec.decode_reqs),
-                 "preempted": len(dec.preempted)}
+                 "preempted": len(dec.preempted),
+                 "prefill_tokens": new_tokens,
+                 "cached_tokens": cached_tokens}
+        if self.prefix_cache is not None:
+            stats.update(self.prefix_cache.stats())
         for req in dec.prefill_reqs:
             row = np.zeros((self.pages_per_seq,), np.int32)
             row[: len(req.pages)] = req.pages
@@ -129,13 +164,21 @@ class Engine:
 
         if dec.prefill_reqs:
             self._run_prefill(dec.prefill_reqs)
+            if self.prefix_cache is not None:
+                for r in dec.prefill_reqs:
+                    # index the now-written full prompt pages so concurrent
+                    # shared-prefix requests can reuse them immediately
+                    self.prefix_cache.insert(r.prompt, r.pages,
+                                             r.num_prompt_tokens)
         if dec.decode_reqs:
             self._run_decode(dec.decode_reqs)
 
         for req in list(self.sched.running):
             if req.done:
+                slot = req.slot  # finish() releases the slot
                 self.sched.finish(req)
-                self.page_table[req.slot if req.slot is not None else 0] = 0
+                if slot is not None:
+                    self.page_table[slot] = 0
         self.step_idx += 1
         return stats
 
@@ -150,6 +193,14 @@ class Engine:
         return k
 
     def _run_prefill(self, reqs: list[Request]) -> None:
+        fresh = [r for r in reqs if not r.num_cached_tokens]
+        cached = [r for r in reqs if r.num_cached_tokens]
+        if fresh:
+            self._run_prefill_fresh(fresh)
+        if cached:
+            self._run_prefill_cached(cached)
+
+    def _run_prefill_fresh(self, reqs: list[Request]) -> None:
         b = next_power_of_2(len(reqs))
         max_len = max(r.num_prompt_tokens for r in reqs)
         s = max(next_power_of_2(max_len), self.cfg.page_size)
@@ -178,6 +229,54 @@ class Engine:
             temps[i] = r.temperature
         toks = self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
         toks = np.asarray(toks)
+        for i, r in enumerate(reqs):
+            r.output.append(int(toks[i]))
+            r.context_len = r.num_prompt_tokens
+
+    def _run_prefill_cached(self, reqs: list[Request]) -> None:
+        """Prefix-cache resume: embed/compute only each prompt's uncached
+        suffix; attention reads the cached prefix from the shared pages
+        (context_lens = cached + suffix)."""
+        b = next_power_of_2(len(reqs))
+        max_suffix = max(r.num_prompt_tokens - r.num_cached_tokens
+                         for r in reqs)
+        s = max(next_power_of_2(max_suffix), self.cfg.page_size)
+        # page-table width bucket: attend only over the pages the longest
+        # context actually uses, not the full max_model_len table (the xla
+        # path gathers the whole table width)
+        max_ctx = max(r.num_prompt_tokens for r in reqs)
+        np_b = min(self.pages_per_seq,
+                   next_power_of_2(cdiv(max_ctx, self.cfg.page_size)))
+        tokens = np.zeros((b, s), np.int32)
+        qlens = np.zeros((b,), np.int32)
+        ctx = np.zeros((b,), np.int32)
+        pt = np.zeros((b, np_b), np.int32)
+        pos = np.tile(np.arange(s, dtype=np.int32)[None], (b, 1))
+        for i, r in enumerate(reqs):
+            suffix = r.prompt[r.num_cached_tokens:]
+            tokens[i, : len(suffix)] = suffix
+            qlens[i] = len(suffix)
+            ctx[i] = r.num_prompt_tokens
+            pos[i] += r.num_cached_tokens  # absolute positions
+            pt[i] = self.page_table[r.slot][:np_b]
+
+        cache_in = self._prefill_cache_view(b)
+        fn = self._get_fn(f"prefill_cached/np{np_b}", b, s)
+        batch = {
+            "inputs": jnp.asarray(tokens),
+            "positions": self._positions(pos),
+            "page_table": jnp.asarray(pt),
+            "context_lens": jnp.asarray(ctx),
+            "query_lens": jnp.asarray(qlens),
+        }
+        logits, new_cache = fn(self.params, cache_in, batch)
+        self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
+        temps = np.zeros((b,), np.float32)
+        for i, r in enumerate(reqs):
+            temps[i] = r.temperature
+        toks = np.asarray(
+            self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
+        )
         for i, r in enumerate(reqs):
             r.output.append(int(toks[i]))
             r.context_len = r.num_prompt_tokens

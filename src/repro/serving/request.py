@@ -28,6 +28,7 @@ class Request:
     slot: int | None = None  # batch slot while RUNNING
     pages: list[int] = dataclasses.field(default_factory=list)
     context_len: int = 0  # tokens currently in the cache
+    num_cached_tokens: int = 0  # prefix tokens reused from the prefix cache
     arrival_step: int = 0
 
     @property

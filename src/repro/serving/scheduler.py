@@ -8,6 +8,15 @@ Fig. 6c/6d analysis leans on):
   2. admit WAITING requests into free slots while (a) a batch slot is free,
      (b) their prompt's pages fit, (c) the prefill token budget holds.
 
+Cache-aware admission (prefix caching enabled): each candidate's longest
+cached prefix is looked up in the `PrefixCache`; the matched full pages are
+pinned (ref-count bump / LRU resurrection) and only the uncached tail is
+allocated, and the prefill-token budget is charged for the UNCACHED tokens
+only — a long prompt with a hot prefix no longer starves the batch.  On
+finish/preemption, full written pages are donated back to the cache (they
+become evictable, not free), so multi-turn and preempt-resume traffic
+re-admits nearly for free.
+
 Outputs host-side ScheduleDecision objects; all array metadata is built by
 the engine (paper §6.1 'computation of metadata').
 """
@@ -16,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.paged.allocator import PageAllocator
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, State
 
 
@@ -28,10 +38,12 @@ class ScheduleDecision:
 
 class Scheduler:
     def __init__(self, allocator: PageAllocator, *, max_seqs: int,
-                 max_prefill_tokens: int = 8192):
+                 max_prefill_tokens: int = 8192,
+                 prefix_cache: PrefixCache | None = None):
         self.alloc = allocator
         self.max_seqs = max_seqs
         self.max_prefill_tokens = max_prefill_tokens
+        self.prefix_cache = prefix_cache
         self.waiting: list[Request] = []
         self.running: list[Request] = []
         self._free_slots = list(range(max_seqs - 1, -1, -1))
@@ -44,6 +56,12 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     def _free_request(self, req: Request) -> None:
+        if self.prefix_cache is not None and req.context_len > 0:
+            # donate: index the full written pages before releasing them,
+            # so they land in the evictable pool instead of the free list.
+            tokens = req.prompt + req.output
+            self.prefix_cache.insert(
+                tokens, req.pages, min(req.context_len, len(tokens)))
         self.alloc.free(req.pages)
         req.pages = []
         if req.slot is not None:
@@ -60,13 +78,23 @@ class Scheduler:
             return None
         victim = max(self.running, key=lambda r: r.arrival_step)
         victim.state = State.PREEMPTED
-        victim.prompt = victim.prompt + victim.output  # recompute on resume
-        victim.output = []
+        self._free_request(victim)  # donates written pages while the
+        victim.prompt = victim.prompt + victim.output  # token ids still
+        victim.output = []                             # match the layout
         victim.context_len = 0
-        self._free_request(victim)
+        victim.num_cached_tokens = 0
         self.running.remove(victim)
         self.waiting.insert(0, victim)
         return victim
+
+    def _match_prefix(self, req: Request) -> list[int]:
+        """Longest cached page chain for the prompt, capped so at least one
+        token is always prefilled (last-token logits must be computed)."""
+        if self.prefix_cache is None:
+            return []
+        pages = self.prefix_cache.match(req.prompt)
+        max_full = (req.num_prompt_tokens - 1) // self.alloc.page_size
+        return pages[:max_full]
 
     def step(self, step_idx: int) -> ScheduleDecision:
         preempted: list[Request] = []
@@ -93,18 +121,31 @@ class Scheduler:
         budget = self.max_prefill_tokens
         while self.waiting and self._free_slots:
             req = self.waiting[0]
-            n_pages = self.alloc.pages_needed(req.num_prompt_tokens)
-            if req.num_prompt_tokens > budget:
+            cached_pages = self._match_prefix(req)
+            num_cached = len(cached_pages) * self.alloc.page_size
+            new_tokens = req.num_prompt_tokens - num_cached
+            if new_tokens > budget:
                 break
-            if not self.alloc.can_allocate(n_pages):
+            n_new = (self.alloc.pages_needed(req.num_prompt_tokens)
+                     - len(cached_pages))
+            if cached_pages:
+                # pin BEFORE allocating: allocation may evict LRU pages,
+                # and the match must not be reclaimed out from under us.
+                self.alloc.reuse(cached_pages)
+            if not self.alloc.can_allocate(n_new):
+                if cached_pages:
+                    self.alloc.free(cached_pages)  # unpin
                 break
+            if self.prefix_cache is not None:
+                self.prefix_cache.record(num_cached)
             self.waiting.pop(0)
-            req.pages = self.alloc.allocate(n_pages)
+            req.pages = cached_pages + self.alloc.allocate(n_new)
+            req.num_cached_tokens = num_cached
             req.slot = self._free_slots.pop()
             req.state = State.RUNNING
             req.arrival_step = step_idx
-            req.context_len = 0
-            budget -= req.num_prompt_tokens
+            req.context_len = num_cached
+            budget -= new_tokens
             self.running.append(req)
             prefill_reqs.append(req)
 

@@ -1,0 +1,51 @@
+"""Minimal stand-in so the suite COLLECTS when `hypothesis` is absent.
+
+Usage in test modules (pytest.importorskip-style, but per-test instead of
+per-module so the non-property tests still run):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+`@given(...)`-decorated tests are replaced by a zero-argument stub that
+skips at runtime; `settings` is a no-op and `st.*` returns inert
+placeholders. Install `-r requirements-dev.txt` to run the real property
+tests.
+"""
+from __future__ import annotations
+
+import pytest
+
+_REASON = "hypothesis not installed (pip install -r requirements-dev.txt)"
+
+
+class _Strategy:
+    """Inert placeholder accepted anywhere a strategy/draw is expected."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+st = _Strategy()
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        # zero-arg stub: keeps pytest from resolving hypothesis-provided
+        # arguments (e.g. `data`) as fixtures
+        def skipped():
+            pytest.skip(_REASON)
+        skipped.__name__ = fn.__name__
+        skipped.__doc__ = fn.__doc__
+        return skipped
+    return deco

@@ -3,7 +3,10 @@ property tests of the paging invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collect-and-skip fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.paged.kv_cache import (
     gather_pages, physical_slots, write_pages,

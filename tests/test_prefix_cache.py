@@ -1,0 +1,306 @@
+"""Prefix-caching subsystem: hash-chained content addressing, ref-counted
+page sharing, LRU eviction under pressure, and engine-level equivalence
+(cache on == cache off, strictly fewer prefilled tokens)."""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collect-and-skip fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import ARCHS, reduced
+from repro.core.paged.allocator import (
+    OutOfPages, PageAllocator, RefCountedPageAllocator,
+)
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.prefix_cache import PrefixCache, chain_keys
+from repro.serving.request import State, make_requests
+
+PS = 16  # page size used by the reduced configs
+
+
+# ---------------------------------------------------------------------------
+# hash-chain keys
+# ---------------------------------------------------------------------------
+
+
+def test_chain_keys_full_pages_only():
+    toks = list(range(PS * 2 + 5))  # 2 full pages + partial tail
+    keys = list(chain_keys(toks, PS))
+    assert len(keys) == 2
+    assert len(list(chain_keys(toks[: PS - 1], PS))) == 0
+
+
+def test_chain_keys_commit_to_prefix():
+    a = list(range(2 * PS))
+    b = list(range(PS)) + [999] * PS  # same page 0, different page 1
+    c = [7] * PS + a[PS:]             # different page 0, same page-1 tokens
+    ka, kb, kc = (list(chain_keys(t, PS)) for t in (a, b, c))
+    assert ka[0] == kb[0] and ka[1] != kb[1]
+    # page-1 key differs even though page-1 TOKENS match: parent chained
+    assert ka[0] != kc[0] and ka[1] != kc[1]
+
+
+def test_match_insert_roundtrip():
+    alloc = RefCountedPageAllocator(16, PS)
+    cache = PrefixCache(alloc, PS)
+    toks = list(range(3 * PS + 4))
+    pages = alloc.allocate(4)
+    assert cache.match(toks) == []
+    cache.insert(toks, pages, len(toks))  # indexes the 3 full pages
+    assert cache.match(toks) == pages[:3]
+    assert cache.match(toks[: 2 * PS]) == pages[:2]
+    # divergence after page 0 stops the walk
+    assert cache.match(toks[:PS] + [999] * PS) == pages[:1]
+
+
+def test_insert_first_writer_wins():
+    alloc = RefCountedPageAllocator(16, PS)
+    cache = PrefixCache(alloc, PS)
+    toks = list(range(PS))
+    p1 = alloc.allocate(1)
+    p2 = alloc.allocate(1)
+    assert cache.insert(toks, p1, PS) == 1
+    assert cache.insert(toks, p2, PS) == 0  # duplicate content: not indexed
+    assert cache.match(toks) == p1
+    alloc.free(p2)
+    assert alloc.evictable_pages == 0  # uncached page went straight to free
+
+
+# ---------------------------------------------------------------------------
+# ref-counted allocator
+# ---------------------------------------------------------------------------
+
+
+def test_refcount_sharing_and_release():
+    alloc = RefCountedPageAllocator(8, PS)
+    a = alloc.allocate(3)
+    alloc.incref(a[:2])  # second sequence shares two pages
+    alloc.check_invariants([a, a[:2]])
+    alloc.free(a)  # first sequence done: shared pages survive
+    alloc.check_invariants([a[:2]])
+    assert alloc.ref_count(a[0]) == 1 and alloc.ref_count(a[2]) == 0
+    assert alloc.free_pages == 5
+    alloc.free(a[:2])
+    alloc.check_invariants([])
+    assert alloc.free_pages == 7
+
+
+def test_double_free_is_hard_error():
+    for alloc in (PageAllocator(8, PS), RefCountedPageAllocator(8, PS)):
+        pages = alloc.allocate(2)
+        alloc.free(pages)
+        with pytest.raises(AssertionError):
+            alloc.free([pages[0]])
+
+
+def test_cached_pages_become_evictable_then_lru_evicted():
+    alloc = RefCountedPageAllocator(5, PS)  # pages 1..4
+    cache = PrefixCache(alloc, PS)
+    t_a, t_b = [1] * PS, [2] * PS
+    pa = alloc.allocate(1)
+    pb = alloc.allocate(1)
+    cache.insert(t_a, pa, PS)
+    cache.insert(t_b, pb, PS)
+    alloc.free(pa)  # evictable (LRU)
+    alloc.free(pb)  # evictable (MRU)
+    assert alloc.evictable_pages == 2 and alloc.free_pages == 4
+    alloc.check_invariants([])
+    got = alloc.allocate(3)  # 2 free + 1 evicted: pa is LRU, dies first
+    assert pa[0] in got
+    assert alloc.evictions == 1
+    assert cache.match(t_a) == []          # stale key dropped with the page
+    assert cache.match(t_b) == pb          # MRU survivor still indexed
+    alloc.check_invariants([got])
+
+
+def test_reuse_resurrects_evictable_pages():
+    alloc = RefCountedPageAllocator(4, PS)
+    cache = PrefixCache(alloc, PS)
+    toks = list(range(2 * PS))
+    pages = alloc.allocate(2)
+    cache.insert(toks, pages, 2 * PS)
+    alloc.free(pages)
+    assert alloc.evictable_pages == 2
+    match = cache.match(toks)
+    alloc.reuse(match)  # pin: back to refcount 1, out of the LRU pool
+    assert alloc.evictable_pages == 0 and alloc.ref_count(pages[0]) == 1
+    alloc.check_invariants([match])
+    with pytest.raises(OutOfPages):
+        alloc.allocate(2)  # only 1 truly free page remains
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_refcount_invariants_under_pressure(data):
+    """Random allocate/share/free/insert traffic: check_invariants holds and
+    eviction keeps the cache index consistent with page contents."""
+    num_pages = data.draw(st.integers(4, 32))
+    alloc = RefCountedPageAllocator(num_pages, PS)
+    cache = PrefixCache(alloc, PS)
+    next_tok = [0]
+    held: list[tuple[list[int], list[int]]] = []  # (pages, tokens)
+    for _ in range(data.draw(st.integers(1, 40))):
+        op = data.draw(st.integers(0, 3))
+        if op == 0 or not held:  # allocate a fresh "prompt"
+            n = data.draw(st.integers(1, 3))
+            if alloc.free_pages >= n:
+                pages = alloc.allocate(n)
+                toks = list(range(next_tok[0], next_tok[0] + n * PS))
+                next_tok[0] += n * PS
+                cache.insert(toks, pages, n * PS)
+                held.append((pages, toks))
+            else:
+                with pytest.raises(OutOfPages):
+                    alloc.allocate(n)
+        elif op == 1:  # share a cached prefix
+            _, toks = held[data.draw(st.integers(0, len(held) - 1))]
+            match = cache.match(toks)
+            if match:
+                alloc.reuse(match)
+                held.append((match, toks[: len(match) * PS]))
+        elif op == 2:  # release a sequence
+            pages, _ = held.pop(data.draw(st.integers(0, len(held) - 1)))
+            alloc.free(pages)
+        else:  # re-donate (idempotent insert)
+            pages, toks = held[data.draw(st.integers(0, len(held) - 1))]
+            cache.insert(toks, pages, len(pages) * PS)
+        alloc.check_invariants([p for p, _ in held])
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
+    params = M.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _shared_prefix_prompts(cfg, rng, prefix_len, tails):
+    shared = list(rng.integers(1, cfg.vocab_size, size=prefix_len))
+    return [shared + list(rng.integers(1, cfg.vocab_size, size=n))
+            for n in tails]
+
+
+def test_engine_equivalence_shared_prefix(smollm):
+    """Acceptance: cache on == cache off outputs, strictly fewer prefilled
+    tokens, and hit/miss/eviction stats surfaced by step()."""
+    cfg, params = smollm
+    rng = np.random.default_rng(7)
+    prompts = _shared_prefix_prompts(cfg, rng, 40, (7, 12, 9, 5))
+    results, prefilled = {}, {}
+    for cache_on in (False, True):
+        eng = Engine(cfg, params, max_seqs=2, num_pages=64,
+                     max_model_len=256, enable_prefix_caching=cache_on)
+        reqs = make_requests([list(p) for p in prompts], max_new_tokens=6)
+        for r in reqs:
+            eng.add_request(r)
+        last_stats = None
+        while eng.sched.has_work:
+            last_stats = eng.step()
+        results[cache_on] = [r.output for r in reqs]
+        prefilled[cache_on] = eng.prefilled_tokens
+        assert all(r.state is State.FINISHED for r in reqs)
+        assert eng.alloc.free_pages == eng.num_pages - 1
+        if cache_on:
+            for key in ("cache_hits", "cache_misses", "cache_evictions",
+                        "prefill_tokens", "cached_tokens"):
+                assert key in last_stats, key
+            assert last_stats["cache_hits"] >= 2
+            assert eng.cached_prefill_tokens > 0
+    assert results[True] == results[False]
+    assert prefilled[True] < prefilled[False]
+    total = sum(len(p) for p in prompts)
+    assert prefilled[False] == total
+    assert prefilled[True] == total - 2 * (40 // cfg.page_size) * cfg.page_size
+
+
+def test_engine_equivalence_pallas_backend(smollm):
+    """Same acceptance on the pallas (interpret-mode) backend: the cached
+    path runs the paper's ragged Q-Block kernel."""
+    cfg, params = smollm
+    rng = np.random.default_rng(8)
+    prompts = _shared_prefix_prompts(cfg, rng, 40, (7, 12))
+    results = {}
+    for cache_on in (False, True):
+        eng = Engine(cfg, params, max_seqs=1, num_pages=64,
+                     max_model_len=128, backend="pallas",
+                     enable_prefix_caching=cache_on)
+        reqs = make_requests([list(p) for p in prompts], max_new_tokens=4)
+        eng.generate(reqs)
+        results[cache_on] = [r.output for r in reqs]
+        if cache_on:
+            assert eng.cached_prefill_tokens == 32
+    assert results[True] == results[False]
+
+
+def test_engine_eviction_under_pressure(smollm):
+    """Tiny pool: cached pages are reclaimed LRU-first and serving still
+    completes with exact outputs."""
+    cfg, params = smollm
+    rng = np.random.default_rng(9)
+    prompts = _shared_prefix_prompts(cfg, rng, 32, (6, 4, 8, 5, 7))
+    results = {}
+    for cache_on, num_pages in ((False, 64), (True, 12)):
+        eng = Engine(cfg, params, max_seqs=2, num_pages=num_pages,
+                     max_model_len=128, enable_prefix_caching=cache_on)
+        reqs = make_requests([list(p) for p in prompts], max_new_tokens=8)
+        eng.generate(reqs)
+        results[cache_on] = [r.output for r in reqs]
+        assert all(r.state is State.FINISHED for r in reqs)
+        assert eng.alloc.free_pages == eng.num_pages - 1
+    assert results[True] == results[False]
+
+
+def test_engine_preemption_with_caching(smollm):
+    """Preempted requests donate their pages and resume via the cache —
+    outputs still match the ample-pool run."""
+    cfg, params = smollm
+    rng = np.random.default_rng(10)
+    prompts = _shared_prefix_prompts(cfg, rng, 16, (8, 8))
+    out = []
+    for num_pages in (64, 7):  # ample vs starved (forces preemption)
+        eng = Engine(cfg, params, max_seqs=2, num_pages=num_pages,
+                     max_model_len=64, enable_prefix_caching=True)
+        reqs = make_requests([list(p) for p in prompts], max_new_tokens=8)
+        eng.generate(reqs)
+        out.append([r.output for r in reqs])
+        assert all(r.state is State.FINISHED for r in reqs)
+    assert out[0] == out[1]
+
+
+def test_prefix_caching_rejects_unsupported_families(smollm):
+    cfg = reduced(ARCHS["xlstm-350m"]).replace(dtype="float32")
+    params = M.init(cfg, jax.random.key(0))
+    with pytest.raises(AssertionError):
+        Engine(cfg, params, max_seqs=2, num_pages=16, max_model_len=64,
+               enable_prefix_caching=True)
+
+
+def test_multi_turn_reuse(smollm):
+    """Cross-turn reuse: turn 2 extends turn 1's full conversation and
+    re-admits with the donated pages as its cached prefix."""
+    cfg, params = smollm
+    rng = np.random.default_rng(11)
+    eng = Engine(cfg, params, max_seqs=2, num_pages=64, max_model_len=256,
+                 enable_prefix_caching=True)
+    turn1 = list(rng.integers(1, cfg.vocab_size, size=30))
+    [r1] = make_requests([list(turn1)], max_new_tokens=8)
+    eng.generate([r1])
+    assert eng.prefix_cache.hits == 0
+    # turn 2: conversation so far + the tokens whose KV was written
+    convo = turn1 + r1.output
+    turn2 = convo + list(rng.integers(1, cfg.vocab_size, size=10))
+    [r2] = make_requests([list(turn2)], max_new_tokens=8)
+    eng.generate([r2])
+    assert eng.prefix_cache.hits == 1
+    # everything written in turn 1 except the partial tail page is reused
+    reusable = ((len(convo) - 1) // cfg.page_size) * cfg.page_size
+    assert r2.num_cached_tokens == reusable

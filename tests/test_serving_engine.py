@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collect-and-skip fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import ARCHS, reduced
 from repro.core.paged.allocator import OutOfPages, PageAllocator
