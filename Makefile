@@ -1,13 +1,21 @@
 # Tier-1 verification (ROADMAP.md): the whole suite, fail-fast.
 PY ?= python
 
-.PHONY: test test-full bench deps-dev
+.PHONY: test test-full test-fast bench deps-dev
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 test-full:
 	PYTHONPATH=src $(PY) -m pytest -q
+
+# Serving + scheduler subset (<60s): the chunked-prefill differential
+# suite, engine/scheduler behavior, and the allocator property tests —
+# kernel sweeps and arch matrices (-m slow) don't gate it.
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" \
+	  tests/test_chunked_prefill.py tests/test_serving_engine.py \
+	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/run.py

@@ -50,6 +50,44 @@ def run(emit):
     emit("fig9/batched_tokens_per_s", total / dt,
          f"8 concurrent requests, {total} tokens")
 
+    # chunked prefill: a long prompt arriving mid-decode monopolizes a step
+    # under monolithic prefill (the inter-token-latency spike chunking
+    # exists to remove) — compare the worst per-step wall-clock while
+    # short requests keep decoding
+    long_prompt = list(rng.integers(1, cfg.vocab_size, size=192))
+    shorts = [list(rng.integers(1, cfg.vocab_size, size=8))
+              for _ in range(3)]
+
+    def run_mixed(eng):
+        sreqs = make_requests([list(p) for p in shorts], max_new_tokens=24)
+        for r in sreqs:
+            eng.add_request(r)
+        for _ in range(4):
+            eng.step()  # shorts reach steady-state decode
+        [lr] = make_requests([list(long_prompt)], max_new_tokens=4)
+        eng.add_request(lr)
+        step_times = []
+        while eng.sched.has_work:
+            t0 = time.perf_counter()
+            eng.step()
+            step_times.append(time.perf_counter() - t0)
+        return step_times
+
+    spike = {}
+    for chunked in (False, True):
+        eng = Engine(cfg, params, max_seqs=4, num_pages=256,
+                     max_model_len=512, enable_chunked_prefill=chunked,
+                     max_prefill_tokens=32 if chunked else 8192)
+        run_mixed(eng)                    # warmup: capture executables
+        times = run_mixed(eng)            # measured
+        tag = "chunked" if chunked else "monolithic"
+        spike[chunked] = max(times)
+        emit(f"chunked_prefill/max_step_ms/{tag}", max(times) * 1e3,
+             f"worst step while a 192-token prompt lands mid-decode "
+             f"({len(times)} steps)")
+    emit("chunked_prefill/itl_spike_ratio", spike[False] / spike[True],
+         "monolithic worst-step / chunked worst-step (budget=32)")
+
     # shared-prefix workload: chat/agent traffic with a common system prompt
     # — the automatic-prefix-caching scenario (cache hit rate + prefill
     # savings + wall-clock, cache off vs on)

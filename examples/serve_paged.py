@@ -31,6 +31,12 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend a common N-token system prompt to every "
                          "request (the prefix-cache hot path)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="split long prompts into budget-sized chunks "
+                         "across steps (flat inter-token latency)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=None,
+                    metavar="N", help="per-step token budget (default: "
+                    "32 when --chunked-prefill, else 8192)")
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch]).replace(dtype="float32")
@@ -48,9 +54,13 @@ def main():
     print(f"heuristics installed (tuned-vs-fixed speedup "
           f"{rep['tuned_vs_untuned_speedup']:.2f}x)")
 
+    budget = args.max_prefill_tokens if args.max_prefill_tokens is not None \
+        else (32 if args.chunked_prefill else 8192)
     eng = Engine(cfg, params, max_seqs=4, num_pages=96, max_model_len=256,
                  backend=args.backend,
-                 enable_prefix_caching=args.prefix_caching)
+                 enable_prefix_caching=args.prefix_caching,
+                 enable_chunked_prefill=args.chunked_prefill,
+                 max_prefill_tokens=budget)
     rng = np.random.default_rng(0)
     shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
     prompts = [shared + list(rng.integers(1, cfg.vocab_size,
@@ -61,8 +71,10 @@ def main():
     for r in reqs:
         eng.add_request(r)
     steps = 0
+    partial_chunks = 0
     while eng.sched.has_work:
         stats = eng.step()
+        partial_chunks += stats["partial_prefills"]
         if steps % 10 == 0:
             print(f"step {steps:3d}: prefill={stats['prefill']} "
                   f"decode={stats['decode']} preempted={stats['preempted']} "
@@ -74,6 +86,9 @@ def main():
           f"({total / dt:.1f} tok/s on this host)")
     print(f"graph captures: {len(eng.compile_events)} "
           f"(static decode batch + pow2 prefill buckets)")
+    if args.chunked_prefill:
+        print(f"chunked prefill: budget={budget} tokens/step, "
+              f"{partial_chunks} partial chunks scheduled")
     if eng.prefix_cache is not None:
         st = eng.prefix_cache.stats()
         print(f"prefix cache: {st['cache_hits']} hits / "

@@ -194,10 +194,12 @@ def prefill_attention_uniform(
     kernel_cfg: heuristics.KernelConfig | None = None,
 ) -> jax.Array:
     """Uniform-layout prefill over sequences with NO prior context
-    (context_lens == query_lens). The chunk KV is in hand, so the xla path
-    attends directly over it; the pallas path reads it back from the pages
-    (paper §4.3 semantics). Chunked (context>0) prefill goes through
-    `prefill_attention_ragged`."""
+    (context_lens == query_lens) — a whole fresh prompt or the FIRST chunk
+    of a chunked prefill. The chunk KV is in hand, so the xla path attends
+    directly over it; the pallas path reads it back from the pages (paper
+    §4.3 semantics). Resumed (context>0) prefill goes through
+    `prefill_attention_cached` (uniform batch) or
+    `prefill_attention_ragged` (token-packed)."""
     b, s, hq, dk = q.shape
     if backend == "pallas":
         cfg = kernel_cfg or heuristics.KernelConfig("gqa")
@@ -231,10 +233,12 @@ def prefill_attention_cached(
     scale: float | None = None,
     kernel_cfg: heuristics.KernelConfig | None = None,
 ) -> jax.Array:
-    """Uniform-layout prefill over sequences WITH prior cached context
-    (context_lens = num_cached + query_lens; the prefix-cache path). The
-    suffix KV is already written to the pages, so BOTH backends read the
-    full context back from the pages:
+    """Uniform-layout prefill over sequences WITH prior context
+    (context_lens = prior + query_lens) — the shared resume path for BOTH
+    prefix-cache hits and chunked-prefill continuations; the prior context
+    only has to exist in the pages, not to have been computed this step.
+    The chunk's KV is already written to the pages, so BOTH backends read
+    the full context back from the pages:
       pallas  the paper's Q-Block ragged kernel via the stride-S trick
               (uniform padded layout == ragged layout with stride-s starts)
       xla     page gather + online-softmax scan with PER-SEQUENCE causal

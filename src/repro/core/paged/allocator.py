@@ -48,6 +48,21 @@ class PageAllocator:
     def pages_needed(self, num_tokens: int) -> int:
         return -(-num_tokens // self.page_size)
 
+    def pages_to_cover(self, num_held: int, num_tokens: int) -> int:
+        """Additional pages a sequence currently holding `num_held` pages
+        needs so its table covers `num_tokens` tokens.  Chunk-granular
+        growth: prefill chunks and decode steps both extend a sequence's
+        page run incrementally instead of reserving the full prompt's
+        pages up-front."""
+        return max(0, self.pages_needed(num_tokens) - num_held)
+
+    def fits_pool(self, num_tokens: int) -> bool:
+        """Whether `num_tokens` can EVER be resident (pool capacity, not
+        current free count) — the admission sanity check that keeps a
+        chunked prefill from being admitted, partially computed, and then
+        preempt-thrashed forever because its prompt exceeds the pool."""
+        return self.pages_needed(num_tokens) <= self.num_pages - 1
+
     def can_allocate(self, n: int) -> bool:
         return n <= self.free_pages
 

@@ -506,12 +506,14 @@ def apply_prefill(cfg: ModelConfig, params, cache, batch, *, backend="xla"):
 
 def apply_prefill_cached(cfg: ModelConfig, params, cache, batch, *,
                          backend="xla"):
-    """Prefix-cache resume prefill: only the UNCACHED suffix of each prompt
-    is embedded/computed (batch['inputs'] [B,S] holds suffix ids, positions
-    are absolute, context_lens = cached + suffix, query_lens = suffix).
-    Attention writes suffix KV into the tail pages and attends over the
-    full paged context via the chunked path. Attention-family models only
-    (SSM/hybrid recurrent state is not page-addressable).
+    """Resumable prefill at context > 0: only this step's chunk of each
+    prompt is embedded/computed (batch['inputs'] [B,S] holds chunk ids,
+    positions are absolute, context_lens = prior context + chunk,
+    query_lens = chunk).  The prior context — earlier prefill chunks, a
+    prefix-cache hit, or both — is read back from the pages; attention
+    writes the chunk's KV into the tail pages and attends over the full
+    paged context.  Attention-family models only (SSM/hybrid recurrent
+    state is not page-addressable).
     Returns (last_token_logits [B,V], new_cache)."""
     assert cfg.family in ("dense", "moe", "audio", "vlm") \
         and not cfg.mla.kv_lora_rank, \

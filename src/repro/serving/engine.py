@@ -19,6 +19,16 @@ executable (`prefill_cached` kind) that embeds/computes ONLY the uncached
 suffix and attends over the full paged context (context_lens = cached +
 chunk). Attention-family models only; outputs are equivalent to the
 uncached engine while prefilling strictly fewer tokens.
+
+Chunked prefill (`enable_chunked_prefill=True`): the scheduler splits long
+prompts into token-budget-sized chunks across consecutive steps; every
+chunk with `chunk_start > 0` — whether its context comes from an earlier
+chunk or from a prefix-cache hit — resumes through the SAME cached-context
+executable, so prefix caching and chunked prefill converge on one
+resumable-prefill code path.  Chunking only changes WHEN prompt tokens are
+computed, never WHAT is computed: outputs are token-for-token identical to
+the unchunked engine (tests/test_chunked_prefill.py proves it
+differentially).
 """
 from __future__ import annotations
 
@@ -52,6 +62,7 @@ class Engine:
         max_prefill_tokens: int = 8192,
         backend: str = "xla",
         enable_prefix_caching: bool = False,
+        enable_chunked_prefill: bool = False,
         seed: int = 0,
     ):
         self.cfg = cfg
@@ -62,15 +73,17 @@ class Engine:
         self.pages_per_seq = cdiv(max_model_len, cfg.page_size)
         self.alloc = RefCountedPageAllocator(num_pages, cfg.page_size)
         self.prefix_cache = None
-        if enable_prefix_caching:
+        if enable_prefix_caching or enable_chunked_prefill:
             assert cfg.family in ("dense", "moe", "audio", "vlm") \
                 and not cfg.mla.kv_lora_rank, (
-                    "prefix caching needs page-addressable context "
-                    f"(unsupported for family={cfg.family!r}/MLA)")
+                    "prefix caching / chunked prefill need page-addressable "
+                    f"context (unsupported for family={cfg.family!r}/MLA)")
+        if enable_prefix_caching:
             self.prefix_cache = PrefixCache(self.alloc, cfg.page_size)
         self.sched = Scheduler(self.alloc, max_seqs=max_seqs,
                                max_prefill_tokens=max_prefill_tokens,
-                               prefix_cache=self.prefix_cache)
+                               prefix_cache=self.prefix_cache,
+                               enable_chunked_prefill=enable_chunked_prefill)
         self.cache = M.make_cache(cfg, max_seqs=max_seqs, num_pages=num_pages)
         self.page_table = np.zeros((max_seqs, self.pages_per_seq), np.int32)
         self.step_idx = 0
@@ -142,16 +155,21 @@ class Engine:
 
     def step(self) -> dict:
         dec = self.sched.step(self.step_idx)
-        new_tokens = sum(r.num_prompt_tokens - r.num_cached_tokens
-                         for r in dec.prefill_reqs)
-        cached_tokens = sum(r.num_cached_tokens for r in dec.prefill_reqs)
+        new_tokens = dec.scheduled_prefill_tokens
+        # cached tokens are reported on a request's FIRST chunk (the one
+        # starting exactly at the matched prefix); later chunk-resumes
+        # start past it and charge nothing
+        cached_tokens = sum(r.num_cached_tokens for r in dec.prefill_reqs
+                            if r.chunk_start == r.num_cached_tokens)
         self.prefilled_tokens += new_tokens
         self.cached_prefill_tokens += cached_tokens
         stats = {"prefill": len(dec.prefill_reqs),
                  "decode": len(dec.decode_reqs),
                  "preempted": len(dec.preempted),
                  "prefill_tokens": new_tokens,
-                 "cached_tokens": cached_tokens}
+                 "cached_tokens": cached_tokens,
+                 "partial_prefills": sum(1 for r in dec.prefill_reqs
+                                         if not r.prefill_done)}
         if self.prefix_cache is not None:
             stats.update(self.prefix_cache.stats())
         for req in dec.prefill_reqs:
@@ -166,15 +184,17 @@ class Engine:
             self._run_prefill(dec.prefill_reqs)
             if self.prefix_cache is not None:
                 for r in dec.prefill_reqs:
-                    # index the now-written full prompt pages so concurrent
-                    # shared-prefix requests can reuse them immediately
-                    self.prefix_cache.insert(r.prompt, r.pages,
-                                             r.num_prompt_tokens)
+                    # index the now-written full pages (up to this chunk's
+                    # end) so concurrent shared-prefix requests can reuse
+                    # them immediately — even mid-chunked-prefill; the
+                    # cursor keeps the chained hashing O(prompt) overall
+                    r.cache_cursor = self.prefix_cache.insert_incremental(
+                        r.prompt, r.pages, r.context_len, r.cache_cursor)
         if dec.decode_reqs:
             self._run_decode(dec.decode_reqs)
 
         for req in list(self.sched.running):
-            if req.done:
+            if req.prefill_done and req.done:
                 slot = req.slot  # finish() releases the slot
                 self.sched.finish(req)
                 if slot is not None:
@@ -193,24 +213,47 @@ class Engine:
         return k
 
     def _run_prefill(self, reqs: list[Request]) -> None:
-        fresh = [r for r in reqs if not r.num_cached_tokens]
-        cached = [r for r in reqs if r.num_cached_tokens]
+        """Execute one scheduled chunk per request.  Chunks starting at
+        context 0 (a whole fresh prompt, or the first chunk of a chunked
+        one) run the uniform prefill executable; every chunk starting at
+        context > 0 — whether the context came from earlier chunks or from
+        a prefix-cache hit — runs the cached-context resume executable.
+        Only a chunk that completes its prompt samples a token."""
+        fresh = [r for r in reqs if r.chunk_start == 0]
+        resumed = [r for r in reqs if r.chunk_start > 0]
         if fresh:
             self._run_prefill_fresh(fresh)
-        if cached:
-            self._run_prefill_cached(cached)
+        if resumed:
+            self._run_prefill_resumed(resumed)
+
+    def _finish_chunk(self, reqs: list[Request], logits) -> None:
+        """Advance progress; sample first tokens for prompts now complete."""
+        done = [(i, r) for i, r in enumerate(reqs)
+                if r.chunk_start + r.num_scheduled_tokens
+                == r.num_prompt_tokens]
+        if done:
+            temps = np.zeros((logits.shape[0],), np.float32)
+            for i, r in done:
+                temps[i] = r.temperature
+            toks = np.asarray(self._sample_fn(
+                logits, self._next_key(), jnp.asarray(temps)))
+            for i, r in done:
+                r.output.append(int(toks[i]))
+        for r in reqs:
+            r.context_len = r.chunk_start + r.num_scheduled_tokens
 
     def _run_prefill_fresh(self, reqs: list[Request]) -> None:
         b = next_power_of_2(len(reqs))
-        max_len = max(r.num_prompt_tokens for r in reqs)
+        max_len = max(r.num_scheduled_tokens for r in reqs)
         s = max(next_power_of_2(max_len), self.cfg.page_size)
         tokens = np.zeros((b, s), np.int32)
         qlens = np.zeros((b,), np.int32)
         pt = np.zeros((b, self.pages_per_seq), np.int32)
         pos = np.tile(np.arange(s, dtype=np.int32)[None], (b, 1))
         for i, r in enumerate(reqs):
-            tokens[i, : r.num_prompt_tokens] = r.prompt
-            qlens[i] = r.num_prompt_tokens
+            n = r.num_scheduled_tokens
+            tokens[i, :n] = r.prompt[:n]
+            qlens[i] = n
             pt[i] = self.page_table[r.slot]
 
         cache_in = self._prefill_cache_view(b)
@@ -224,27 +267,20 @@ class Engine:
         }
         logits, new_cache = fn(self.params, cache_in, batch)
         self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
-        temps = np.zeros((b,), np.float32)
-        for i, r in enumerate(reqs):
-            temps[i] = r.temperature
-        toks = self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
-        toks = np.asarray(toks)
-        for i, r in enumerate(reqs):
-            r.output.append(int(toks[i]))
-            r.context_len = r.num_prompt_tokens
+        self._finish_chunk(reqs, logits)
 
-    def _run_prefill_cached(self, reqs: list[Request]) -> None:
-        """Prefix-cache resume: embed/compute only each prompt's uncached
-        suffix; attention reads the cached prefix from the shared pages
-        (context_lens = cached + suffix)."""
+    def _run_prefill_resumed(self, reqs: list[Request]) -> None:
+        """Resumable prefill (context > 0): embed/compute only this step's
+        chunk; attention reads the prior context — earlier chunks and/or a
+        shared cached prefix — back from the pages
+        (context_lens = chunk_start + chunk)."""
         b = next_power_of_2(len(reqs))
-        max_suffix = max(r.num_prompt_tokens - r.num_cached_tokens
-                         for r in reqs)
-        s = max(next_power_of_2(max_suffix), self.cfg.page_size)
+        max_chunk = max(r.num_scheduled_tokens for r in reqs)
+        s = max(next_power_of_2(max_chunk), self.cfg.page_size)
         # page-table width bucket: attend only over the pages the longest
         # context actually uses, not the full max_model_len table (the xla
         # path gathers the whole table width)
-        max_ctx = max(r.num_prompt_tokens for r in reqs)
+        max_ctx = max(r.chunk_start + r.num_scheduled_tokens for r in reqs)
         np_b = min(self.pages_per_seq,
                    next_power_of_2(cdiv(max_ctx, self.cfg.page_size)))
         tokens = np.zeros((b, s), np.int32)
@@ -253,11 +289,12 @@ class Engine:
         pt = np.zeros((b, np_b), np.int32)
         pos = np.tile(np.arange(s, dtype=np.int32)[None], (b, 1))
         for i, r in enumerate(reqs):
-            suffix = r.prompt[r.num_cached_tokens:]
-            tokens[i, : len(suffix)] = suffix
-            qlens[i] = len(suffix)
-            ctx[i] = r.num_prompt_tokens
-            pos[i] += r.num_cached_tokens  # absolute positions
+            chunk = r.prompt[r.chunk_start:
+                             r.chunk_start + r.num_scheduled_tokens]
+            tokens[i, : len(chunk)] = chunk
+            qlens[i] = len(chunk)
+            ctx[i] = r.chunk_start + r.num_scheduled_tokens
+            pos[i] += r.chunk_start  # absolute positions
             pt[i] = self.page_table[r.slot][:np_b]
 
         cache_in = self._prefill_cache_view(b)
@@ -271,15 +308,7 @@ class Engine:
         }
         logits, new_cache = fn(self.params, cache_in, batch)
         self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
-        temps = np.zeros((b,), np.float32)
-        for i, r in enumerate(reqs):
-            temps[i] = r.temperature
-        toks = np.asarray(
-            self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
-        )
-        for i, r in enumerate(reqs):
-            r.output.append(int(toks[i]))
-            r.context_len = r.num_prompt_tokens
+        self._finish_chunk(reqs, logits)
 
     def _run_decode(self, reqs: list[Request]) -> None:
         b = self.max_seqs  # static decode batch (paper C5)
@@ -313,8 +342,10 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _prefill_cache_view(self, b: int):
-        """Attn pages are global; SSM rows start from zeros for fresh
-        prefills (prefill always begins at context 0 in this engine)."""
+        """Attn pages are global (so chunk-resume reads earlier chunks /
+        cached prefixes straight from them); SSM rows start from zeros —
+        SSM-family prefill always begins at context 0 (chunked prefill and
+        prefix caching are gated to attention families)."""
         view = {}
         for k, v in self.cache.items():
             if k == "attn":

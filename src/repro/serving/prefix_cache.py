@@ -56,14 +56,17 @@ from repro.core.paged.allocator import RefCountedPageAllocator
 _ROOT = b"prefix-cache-root"
 
 
+def _page_key(parent: bytes, tokens: Sequence[int]) -> bytes:
+    h = hashlib.sha256(parent)
+    h.update(b",".join(str(int(t)).encode() for t in tokens))
+    return h.digest()
+
+
 def chain_keys(tokens: Sequence[int], page_size: int) -> Iterator[bytes]:
     """Yield the hash-chain key of every FULL page covered by `tokens`."""
     digest = _ROOT
     for lo in range(0, (len(tokens) // page_size) * page_size, page_size):
-        h = hashlib.sha256(digest)
-        h.update(b",".join(str(int(t)).encode() for t in
-                           tokens[lo: lo + page_size]))
-        digest = h.digest()
+        digest = _page_key(digest, tokens[lo: lo + page_size])
         yield digest
 
 
@@ -113,6 +116,32 @@ class PrefixCache:
 
     # -- registration ------------------------------------------------------
 
+    def _index(self, key: bytes, page: int) -> int:
+        """Register one (chain key -> page) binding; first writer wins."""
+        if key in self._page_of:
+            return 0  # chain position already backed by another page
+        if page in self._key_of:
+            # page already indexed (shared prefix re-donated): its key
+            # must agree with the chain — content never changes.
+            assert self._key_of[page] == key, "cached page content drift"
+            return 0
+        self._page_of[key] = page
+        self._key_of[page] = key
+        self.alloc.mark_cached(page)
+        return 1
+
+    def _insert_pages(self, tokens, pages, start: int, n_full: int,
+                      digest: bytes) -> tuple[tuple[int, bytes], int]:
+        """Shared indexing walk over full pages [start, n_full), chaining
+        from `digest` (the key of page start-1).  Returns the advanced
+        (next_page_idx, digest) cursor and the #pages newly indexed."""
+        ps = self.page_size
+        added = 0
+        for i in range(start, n_full):
+            digest = _page_key(digest, tokens[i * ps: (i + 1) * ps])
+            added += self._index(digest, pages[i])
+        return (max(start, n_full), digest), added
+
     def insert(self, tokens: Sequence[int], pages: Sequence[int],
                num_tokens: int) -> int:
         """Index every full page among the first `num_tokens` tokens (whose
@@ -120,22 +149,23 @@ class PrefixCache:
         [i*ps, (i+1)*ps). First writer wins on key collisions: a duplicate
         physical copy stays uncached. Returns #pages newly indexed."""
         n_full = min(num_tokens, len(tokens)) // self.page_size
-        added = 0
-        for i, key in enumerate(chain_keys(tokens[: n_full * self.page_size],
-                                           self.page_size)):
-            page = pages[i]
-            if key in self._page_of:
-                continue  # chain position already backed by another page
-            if page in self._key_of:
-                # page already indexed (shared prefix re-donated): its key
-                # must agree with the chain — content never changes.
-                assert self._key_of[page] == key, "cached page content drift"
-                continue
-            self._page_of[key] = page
-            self._key_of[page] = key
-            self.alloc.mark_cached(page)
-            added += 1
+        _, added = self._insert_pages(tokens, pages, 0, n_full, _ROOT)
         return added
+
+    def insert_incremental(self, tokens: Sequence[int],
+                           pages: Sequence[int], num_tokens: int,
+                           cursor: tuple[int, bytes] | None = None,
+                           ) -> tuple[int, bytes]:
+        """`insert`, resumable across a chunked prefill: `cursor` is
+        (next_page_idx, parent_digest) from the previous call, so each
+        full page is hashed exactly ONCE over the whole prefill instead
+        of re-walking the chain from token 0 after every chunk.  Returns
+        the advanced cursor."""
+        start, digest = cursor if cursor is not None else (0, _ROOT)
+        n_full = min(num_tokens, len(tokens)) // self.page_size
+        new_cursor, _ = self._insert_pages(tokens, pages, start, n_full,
+                                           digest)
+        return new_cursor
 
     # -- stats -------------------------------------------------------------
 

@@ -11,6 +11,7 @@ _ids = itertools.count()
 
 class State(enum.Enum):
     WAITING = "waiting"
+    PREFILLING = "prefilling"  # admitted, prompt only partially computed
     RUNNING = "running"
     PREEMPTED = "preempted"
     FINISHED = "finished"
@@ -25,15 +26,33 @@ class Request:
     req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     state: State = State.WAITING
     output: list[int] = dataclasses.field(default_factory=list)
-    slot: int | None = None  # batch slot while RUNNING
+    slot: int | None = None  # batch slot while RUNNING/PREFILLING
     pages: list[int] = dataclasses.field(default_factory=list)
-    context_len: int = 0  # tokens currently in the cache
+    context_len: int = 0  # tokens whose KV is actually written (engine-owned)
     num_cached_tokens: int = 0  # prefix tokens reused from the prefix cache
+    # prefill progress (scheduler-owned plan): prompt tokens whose compute
+    # has been scheduled — cached tokens count as computed.  A prefix-cache
+    # hit and a chunk-resume are the same thing: a chunk starting at
+    # context = num_computed_tokens > 0.
+    num_computed_tokens: int = 0
+    chunk_start: int = 0  # context at which this step's chunk begins
+    num_scheduled_tokens: int = 0  # this step's chunk length
+    # prefix-cache insert cursor (page idx, chain digest): lets the engine
+    # index each written full page once across a chunked prefill
+    cache_cursor: tuple | None = None
     arrival_step: int = 0
 
     @property
     def num_prompt_tokens(self) -> int:
         return len(self.prompt)
+
+    @property
+    def remaining_prompt_tokens(self) -> int:
+        return self.num_prompt_tokens - self.num_computed_tokens
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.num_computed_tokens >= self.num_prompt_tokens
 
     @property
     def done(self) -> bool:

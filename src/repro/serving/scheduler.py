@@ -5,17 +5,33 @@ Fig. 6c/6d analysis leans on):
   1. every RUNNING request decodes one token; if it crosses a page boundary
      it needs one new page — if the pool is exhausted, preempt the youngest
      running request (free its pages, requeue) until the rest fit;
-  2. admit WAITING requests into free slots while (a) a batch slot is free,
-     (b) their prompt's pages fit, (c) the prefill token budget holds.
+  2. in-flight chunked prefills (PREFILLING) schedule their next chunk
+     against the remaining token budget, growing pages chunk-granularly;
+  3. admit WAITING requests into free slots while (a) a batch slot is free,
+     (b) their first chunk's pages fit, (c) the token budget holds — a
+     request is never admitted with an empty (0-token) first chunk.
+
+Chunked prefill (`enable_chunked_prefill=True`): a prompt longer than the
+per-step token budget is split into budget-sized chunks scheduled across
+consecutive steps.  The request sits in the batch in the PREFILLING state
+with `num_computed_tokens` tracking progress; each chunk resumes attention
+at `context = num_computed_tokens` through the engine's cached-context
+prefill path.  The budget is a TOTAL per-step token budget: scheduled
+decodes charge one token each and partial prefills fill the remainder, so
+a long prompt is absorbed across steps without ever displacing decodes —
+the inter-token-latency protection the paper's serving trajectory leans
+on.  Without chunking, a prompt only ever schedules whole (admission
+blocks while it exceeds the budget) and decodes are not charged.
 
 Cache-aware admission (prefix caching enabled): each candidate's longest
 cached prefix is looked up in the `PrefixCache`; the matched full pages are
 pinned (ref-count bump / LRU resurrection) and only the uncached tail is
-allocated, and the prefill-token budget is charged for the UNCACHED tokens
-only — a long prompt with a hot prefix no longer starves the batch.  On
-finish/preemption, full written pages are donated back to the cache (they
-become evictable, not free), so multi-turn and preempt-resume traffic
-re-admits nearly for free.
+allocated, and the budget is charged for the UNCACHED tokens only.  A
+cache hit composes with chunking as "a first chunk that starts at
+context = matched_len" — both land on the same resumable-prefill path.
+On finish/preemption, full written pages are donated back to the cache
+(they become evictable, not free), so multi-turn, preempt-resume, and
+chunk-resume traffic re-admits nearly for free.
 
 Outputs host-side ScheduleDecision objects; all array metadata is built by
 the engine (paper §6.1 'computation of metadata').
@@ -32,23 +48,39 @@ from repro.serving.request import Request, State
 @dataclasses.dataclass
 class ScheduleDecision:
     decode_reqs: list[Request]
-    prefill_reqs: list[Request]
+    prefill_reqs: list[Request]  # admissions + continued chunks, each with
+    #                              (chunk_start, num_scheduled_tokens) set
     preempted: list[Request]
+
+    @property
+    def scheduled_prefill_tokens(self) -> int:
+        return sum(r.num_scheduled_tokens for r in self.prefill_reqs)
 
 
 class Scheduler:
     def __init__(self, allocator: PageAllocator, *, max_seqs: int,
                  max_prefill_tokens: int = 8192,
-                 prefix_cache: PrefixCache | None = None):
+                 prefix_cache: PrefixCache | None = None,
+                 enable_chunked_prefill: bool = False):
+        assert max_prefill_tokens > 0, "token budget must be positive"
         self.alloc = allocator
         self.max_seqs = max_seqs
         self.max_prefill_tokens = max_prefill_tokens
         self.prefix_cache = prefix_cache
+        self.enable_chunked_prefill = enable_chunked_prefill
         self.waiting: list[Request] = []
         self.running: list[Request] = []
         self._free_slots = list(range(max_seqs - 1, -1, -1))
 
     def add(self, req: Request) -> None:
+        # a request whose final length can never be resident (pool
+        # CAPACITY, not transient pressure) would wait forever and
+        # head-of-line block the queue: reject at submission
+        assert self.alloc.fits_pool(
+            req.num_prompt_tokens + req.max_new_tokens), (
+            f"request needs "
+            f"{self.alloc.pages_needed(req.num_prompt_tokens + req.max_new_tokens)}"
+            f" pages, pool holds {self.alloc.num_pages - 1}")
         self.waiting.append(req)
 
     @property
@@ -59,9 +91,12 @@ class Scheduler:
         if self.prefix_cache is not None and req.context_len > 0:
             # donate: index the full written pages before releasing them,
             # so they land in the evictable pool instead of the free list.
+            # The cursor resumes past the prompt pages the engine already
+            # indexed — only decode-written pages hash here.
             tokens = req.prompt + req.output
-            self.prefix_cache.insert(
-                tokens, req.pages, min(req.context_len, len(tokens)))
+            req.cache_cursor = self.prefix_cache.insert_incremental(
+                tokens, req.pages, min(req.context_len, len(tokens)),
+                req.cache_cursor)
         self.alloc.free(req.pages)
         req.pages = []
         if req.slot is not None:
@@ -73,18 +108,30 @@ class Scheduler:
         self._free_request(req)
         self.running.remove(req)
 
+    def _preempt(self, req: Request) -> None:
+        """Evict `req` from the batch back to the head of the wait queue.
+        Written pages are donated to the prefix cache first (when enabled),
+        so the re-admission resumes from the donated prefix instead of
+        recomputing it.  Works mid-prefill: only `context_len` tokens (the
+        executed chunks) have KV, and only those are donated."""
+        req.state = State.PREEMPTED
+        self._free_request(req)  # donates written pages while the
+        req.prompt = req.prompt + req.output  # token ids still
+        req.output = []                       # match the layout
+        req.context_len = 0
+        req.num_cached_tokens = 0
+        req.num_computed_tokens = 0
+        req.chunk_start = 0
+        req.num_scheduled_tokens = 0
+        req.cache_cursor = None
+        self.running.remove(req)
+        self.waiting.insert(0, req)
+
     def _preempt_one(self) -> Request | None:
         if not self.running:
             return None
         victim = max(self.running, key=lambda r: r.arrival_step)
-        victim.state = State.PREEMPTED
-        self._free_request(victim)  # donates written pages while the
-        victim.prompt = victim.prompt + victim.output  # token ids still
-        victim.output = []                             # match the layout
-        victim.context_len = 0
-        victim.num_cached_tokens = 0
-        self.running.remove(victim)
-        self.waiting.insert(0, victim)
+        self._preempt(victim)
         return victim
 
     def _match_prefix(self, req: Request) -> list[int]:
@@ -96,18 +143,35 @@ class Scheduler:
         max_full = (req.num_prompt_tokens - 1) // self.alloc.page_size
         return pages[:max_full]
 
+    def _schedule_chunk(self, req: Request, chunk: int) -> None:
+        """Plan `chunk` prompt tokens starting at the request's progress
+        mark.  The engine executes the chunk this step; a request whose
+        plan reaches the end of the prompt samples its first token and
+        transitions to RUNNING, otherwise it stays PREFILLING."""
+        assert chunk > 0, "never schedule an empty chunk"
+        req.chunk_start = req.num_computed_tokens
+        req.num_scheduled_tokens = chunk
+        req.num_computed_tokens += chunk
+        req.state = (State.RUNNING if req.prefill_done
+                     else State.PREFILLING)
+
     def step(self, step_idx: int) -> ScheduleDecision:
         preempted: list[Request] = []
+        budget = self.max_prefill_tokens
 
         # --- 1. decode pass: grow pages, preempting if needed -------------
         decode_reqs: list[Request] = []
         for req in list(self.running):
-            need = self.alloc.pages_needed(req.total_len + 1) - len(req.pages)
+            if req.state is not State.RUNNING:
+                continue  # PREFILLING: chunk continuation happens in pass 2
+            need = self.alloc.pages_to_cover(len(req.pages), req.total_len + 1)
             while need > self.alloc.free_pages:
                 victim = self._preempt_one()
                 if victim is None:
                     break
                 preempted.append(victim)
+                if victim in decode_reqs:
+                    decode_reqs.remove(victim)
                 if victim is req:
                     break
             if req.state is not State.RUNNING:
@@ -115,18 +179,58 @@ class Scheduler:
             if need > 0:
                 req.pages.extend(self.alloc.allocate(need))
             decode_reqs.append(req)
+        if self.enable_chunked_prefill:
+            # decodes share the per-step token budget with prefill chunks
+            budget -= len(decode_reqs)
 
-        # --- 2. admit prefills ---------------------------------------------
+        # --- 2. continue in-flight chunked prefills -----------------------
+        # A continuation NEVER preempts (decodes keep absolute priority and
+        # prefill-vs-prefill eviction livelocks): under page pressure the
+        # chunk shrinks to what the free pool covers right now, down to a
+        # stall — decodes and finishes free pages within a few steps.
         prefill_reqs: list[Request] = []
-        budget = self.max_prefill_tokens
-        while self.waiting and self._free_slots:
+        ps = self.alloc.page_size
+        for req in [r for r in self.running if r.state is State.PREFILLING]:
+            if budget <= 0:
+                break
+            chunk = min(req.remaining_prompt_tokens, budget)
+            coverable = ((len(req.pages) + self.alloc.free_pages) * ps
+                         - req.num_computed_tokens)
+            chunk = min(chunk, coverable)
+            if chunk <= 0:
+                continue  # stalled: no empty chunks, wait for free pages
+            need = self.alloc.pages_to_cover(
+                len(req.pages), req.num_computed_tokens + chunk)
+            if need > 0:
+                req.pages.extend(self.alloc.allocate(need))
+            self._schedule_chunk(req, chunk)
+            budget -= chunk
+            prefill_reqs.append(req)
+
+        # --- 3. admit prefills --------------------------------------------
+        while self.waiting and self._free_slots and budget > 0:
             req = self.waiting[0]
+            if not self.alloc.fits_pool(req.num_prompt_tokens
+                                        + req.max_new_tokens):
+                # only reachable after preemption folded generated tokens
+                # into the prompt (add() rejects oversize submissions):
+                # the request can never again be resident, so finish it
+                # with what it produced instead of blocking the queue
+                self.waiting.pop(0)
+                req.state = State.FINISHED
+                continue
             cached_pages = self._match_prefix(req)
             num_cached = len(cached_pages) * self.alloc.page_size
-            new_tokens = req.num_prompt_tokens - num_cached
-            if new_tokens > budget:
-                break
-            n_new = (self.alloc.pages_needed(req.num_prompt_tokens)
+            remaining = req.num_prompt_tokens - num_cached
+            if self.enable_chunked_prefill:
+                chunk = min(remaining, budget)
+            else:
+                if remaining > budget:
+                    break
+                chunk = remaining
+            if chunk <= 0:
+                break  # exhausted budget: never admit an empty first chunk
+            n_new = (self.alloc.pages_needed(num_cached + chunk)
                      - len(cached_pages))
             if cached_pages:
                 # pin BEFORE allocating: allocation may evict LRU pages,
@@ -141,12 +245,23 @@ class Scheduler:
             self.waiting.pop(0)
             req.pages = cached_pages + self.alloc.allocate(n_new)
             req.num_cached_tokens = num_cached
+            req.num_computed_tokens = num_cached
             req.slot = self._free_slots.pop()
-            req.state = State.RUNNING
             req.arrival_step = step_idx
             req.context_len = num_cached
-            budget -= new_tokens
+            self._schedule_chunk(req, chunk)
+            budget -= chunk
             self.running.append(req)
             prefill_reqs.append(req)
+
+        # --- liveness backstop --------------------------------------------
+        # Every resident request is a stalled chunked prefill (they jointly
+        # exhausted the pool, so none can grow and nothing decodes): evict
+        # the youngest so the oldest makes progress next step.  Unreachable
+        # without chunking — RUNNING requests always decode.
+        if not decode_reqs and not prefill_reqs and self.running:
+            victim = self._preempt_one()
+            if victim is not None:
+                preempted.append(victim)
 
         return ScheduleDecision(decode_reqs, prefill_reqs, preempted)

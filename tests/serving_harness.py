@@ -1,0 +1,159 @@
+"""Shared serving-test harness.
+
+One place for the engine-test plumbing every serving suite used to
+copy-paste: model/param construction, engine building, stepping a request
+set to completion, and DIFFERENTIAL comparison of two runs.
+
+The core idea is that most serving features (chunked prefill, prefix
+caching, preemption) are scheduling/memory-management changes whose only
+acceptable observable effect is WHEN tokens are computed — never WHAT is
+computed.  `run_requests` therefore checks per-step invariants (token
+budget, allocator page conservation) while it drives the engine, and
+`assert_same_outputs` asserts token-for-token equality between engine
+configurations; `greedy_reference` pins both to the dense cacheless
+forward as ground truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.request import Request, State, make_requests
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+
+def build_cfg_params(arch: str = "smollm-135m", seed: int = 0):
+    """(cfg, params) of the reduced test model — wrap in a module-scoped
+    fixture so each test module pays init once."""
+    cfg = reduced(ARCHS[arch]).replace(dtype="float32")
+    params = M.init(cfg, jax.random.key(seed))
+    return cfg, params
+
+
+def build_engine(cfg, params, *, max_seqs: int = 4, num_pages: int = 64,
+                 max_model_len: int = 256, **kw) -> Engine:
+    return Engine(cfg, params, max_seqs=max_seqs, num_pages=num_pages,
+                  max_model_len=max_model_len, **kw)
+
+
+def make_prompts(cfg, rng, lens):
+    return [list(rng.integers(1, cfg.vocab_size, size=int(n)))
+            for n in lens]
+
+
+def shared_prefix_prompts(cfg, rng, prefix_len, tails):
+    shared = list(rng.integers(1, cfg.vocab_size, size=prefix_len))
+    return [shared + list(rng.integers(1, cfg.vocab_size, size=int(n)))
+            for n in tails]
+
+
+# ---------------------------------------------------------------------------
+# run-to-completion with per-step invariants
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunResult:
+    engine: Engine
+    requests: list[Request]
+    step_stats: list[dict]
+
+    @property
+    def outputs(self) -> list[list[int]]:
+        return [r.output for r in self.requests]
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.step_stats)
+
+    @property
+    def last_stats(self) -> dict:
+        return self.step_stats[-1]
+
+    def total(self, key: str) -> int:
+        return sum(s[key] for s in self.step_stats)
+
+
+def assert_step_invariants(eng: Engine, stats: dict) -> None:
+    """Per-step serving invariants.
+
+    Budget: scheduled prefill tokens never exceed the per-step prefill
+    budget; with chunked prefill the budget is TOTAL — each scheduled
+    decode charges one token, partial prefills fill the remainder (decodes
+    are never displaced, so a decode-saturated step may legitimately hold
+    `decode > budget` with zero prefill tokens).
+
+    Page conservation: the running requests' page lists account for every
+    page reference (shared pages appear once per holder), and referenced /
+    evictable / free pages partition the pool — `check_invariants` makes
+    leaks and double-books hard errors mid-run, not just at drain time.
+    """
+    sched = eng.sched
+    assert stats["prefill_tokens"] <= sched.max_prefill_tokens, stats
+    if sched.enable_chunked_prefill:
+        assert (stats["prefill_tokens"] + stats["decode"]
+                <= max(sched.max_prefill_tokens, stats["decode"])), stats
+    eng.alloc.check_invariants([r.pages for r in sched.running])
+
+
+def run_requests(eng: Engine, prompts, *, max_new_tokens: int = 8,
+                 max_steps: int = 10_000, check_invariants: bool = True,
+                 expect_finished: bool = True, **req_kw) -> RunResult:
+    """Submit one request per prompt and step the engine until it drains,
+    checking per-step invariants along the way."""
+    reqs = make_requests([list(p) for p in prompts],
+                         max_new_tokens=max_new_tokens, **req_kw)
+    for r in reqs:
+        eng.add_request(r)
+    stats: list[dict] = []
+    while eng.sched.has_work and len(stats) < max_steps:
+        st = eng.step()
+        stats.append(st)
+        if check_invariants:
+            assert_step_invariants(eng, st)
+    assert not eng.sched.has_work, \
+        f"engine did not drain within {max_steps} steps"
+    if expect_finished:
+        assert all(r.state is State.FINISHED for r in reqs), \
+            [r.state for r in reqs]
+        assert eng.alloc.free_pages == eng.num_pages - 1, "pages leaked"
+    return RunResult(eng, reqs, stats)
+
+
+# ---------------------------------------------------------------------------
+# differential comparison
+# ---------------------------------------------------------------------------
+
+
+def assert_same_outputs(a: RunResult, b: RunResult, *,
+                        label_a: str = "a", label_b: str = "b") -> None:
+    """Token-for-token equality of two runs over the same request set."""
+    assert len(a.requests) == len(b.requests)
+    for i, (ra, rb) in enumerate(zip(a.requests, b.requests)):
+        assert ra.output == rb.output, (
+            f"request {i} (prompt len {ra.num_prompt_tokens}): outputs "
+            f"diverge between {label_a} and {label_b}\n"
+            f"  {label_a}: {ra.output}\n  {label_b}: {rb.output}")
+
+
+def greedy_reference(cfg, params, prompt, num_tokens: int) -> list[int]:
+    """Dense (cacheless) greedy continuation — the ground truth every
+    engine configuration must reproduce exactly."""
+    toks = list(prompt)
+    for _ in range(num_tokens):
+        x = jnp.asarray(toks)[None]
+        logits, _, _ = M.forward(
+            cfg, params, x, M.default_positions(cfg, 1, len(toks)),
+            mode="train",
+        )
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]

@@ -1,0 +1,129 @@
+"""Property-based tests for `RefCountedPageAllocator` (no PrefixCache in
+the loop — the allocator alone must keep its books straight).
+
+Random alloc / share / donate / evict / invalidate traffic, model-checked
+after every operation:
+  * page conservation — referenced + evictable + free always partition
+    [1, num_pages), with refcounts equal to the holders' multiplicity
+    (`check_invariants`);
+  * never double-free — releasing a page past refcount 0 is a hard error;
+  * the NULL page (0) is never handed out;
+  * the `on_evict` callback fires only for donated (cache-marked) pages,
+    and an evicted page is never one a sequence still references.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collect-and-skip fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.paged.allocator import OutOfPages, RefCountedPageAllocator
+
+PS = 8
+
+
+def _referenced(held):
+    return {p for seq in held for p in seq}
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.data())
+def test_alloc_share_donate_evict_conserves_pages(data):
+    num_pages = data.draw(st.integers(3, 40))
+    alloc = RefCountedPageAllocator(num_pages, PS)
+    held: list[list[int]] = []  # one page list per live "sequence"
+    donated: set[int] = set()  # pages currently cache-marked
+
+    def on_evict(p):  # fires inside allocate() when the free list is dry
+        assert p not in _referenced(held), "evicted a referenced page"
+        assert p in donated, "evicted a page that was never donated"
+        donated.discard(p)  # eviction invalidates the cache marking
+
+    alloc.on_evict = on_evict
+    for _ in range(data.draw(st.integers(1, 60))):
+        op = data.draw(st.integers(0, 4))
+        if op == 0 or not held:
+            # -- allocate a fresh sequence (may reclaim evictable pages) --
+            n = data.draw(st.integers(1, 3))
+            if alloc.free_pages >= n:
+                live_before = _referenced(held)
+                pages = alloc.allocate(n)
+                assert 0 not in pages, "NULL page handed out"
+                assert len(set(pages)) == n
+                assert live_before.isdisjoint(pages), \
+                    "allocated a page a sequence still references"
+                held.append(pages)
+            else:
+                with pytest.raises(OutOfPages):
+                    alloc.allocate(n)
+        elif op == 1:
+            # -- share a live prefix (second sequence pins the pages) -----
+            seq = held[data.draw(st.integers(0, len(held) - 1))]
+            k = data.draw(st.integers(1, len(seq)))
+            alloc.incref(seq[:k])
+            held.append(list(seq[:k]))
+        elif op == 2:
+            # -- donate: the cache now content-addresses these pages ------
+            seq = held[data.draw(st.integers(0, len(held) - 1))]
+            for p in seq:
+                alloc.mark_cached(p)
+            donated.update(seq)
+        elif op == 3:
+            # -- release one sequence (donated pages park as evictable) ---
+            seq = held.pop(data.draw(st.integers(0, len(held) - 1)))
+            alloc.free(seq)
+        else:
+            # -- resurrect an evictable page, or cache-side invalidation --
+            parked = sorted(donated - _referenced(held))
+            if parked:
+                p = parked[data.draw(st.integers(0, len(parked) - 1))]
+                if data.draw(st.booleans()):
+                    alloc.reuse([p])
+                    held.append([p])
+                else:
+                    alloc.uncache(p)
+                    donated.discard(p)
+        alloc.check_invariants(held)
+    # drain: releasing everything returns the pool to fully allocatable
+    for seq in held:
+        alloc.free(seq)
+    alloc.check_invariants([])
+    assert alloc.free_pages == num_pages - 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_release_past_zero_is_always_a_hard_error(data):
+    """However a page got to refcount 0 — plain free, donation parking it
+    in the LRU pool, or eviction recycling it — freeing it again must
+    raise instead of corrupting the pool."""
+    alloc = RefCountedPageAllocator(data.draw(st.integers(3, 16)), PS)
+    pages = alloc.allocate(2)
+    shares = data.draw(st.integers(0, 3))
+    for _ in range(shares):
+        alloc.incref(pages)
+    if data.draw(st.booleans()):
+        for p in pages:
+            alloc.mark_cached(p)  # donated: refs drop to evictable, not free
+    for _ in range(shares + 1):
+        alloc.free(pages)
+    with pytest.raises(AssertionError):
+        alloc.free([pages[0]])
+    alloc.check_invariants([])
+
+
+def test_eviction_is_lru_and_notifies_once():
+    alloc = RefCountedPageAllocator(4, PS)  # pages 1..3
+    evicted = []
+    alloc.on_evict = evicted.append
+    pages = alloc.allocate(3)
+    for p in pages:
+        alloc.mark_cached(p)
+    alloc.free([pages[1]])  # LRU order: 1, then 0, then 2
+    alloc.free([pages[0]])
+    alloc.free([pages[2]])
+    got = alloc.allocate(2)  # reclaims the two least-recently-parked
+    assert evicted == [pages[1], pages[0]]
+    assert set(got) == {pages[1], pages[0]}
+    alloc.check_invariants([got])

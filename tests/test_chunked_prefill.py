@@ -1,0 +1,347 @@
+"""Chunked prefill: the differential serving-equivalence suite.
+
+Chunked prefill is a SCHEDULING change — its only acceptable observable
+effect is WHEN prompt tokens are computed, never WHAT is computed.  Every
+engine-level test here is differential: the same request set runs through
+an unchunked and a chunked (and cached/uncached) engine and the outputs
+must match token for token, while the harness checks per-step budget and
+allocator page-conservation invariants on every step.  Scheduler-level
+tests pin the edge cases (exact-budget prompts, empty-chunk admission,
+mid-prompt preemption) without touching jax.
+"""
+import jax
+import numpy as np
+import pytest
+
+import serving_harness as H
+from repro.core.paged.allocator import RefCountedPageAllocator
+from repro.serving.request import State, make_requests
+from repro.serving.scheduler import Scheduler
+
+BUDGET = 16  # tokens per step in the chunked engines (== 1 page)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    return H.build_cfg_params()
+
+
+# ---------------------------------------------------------------------------
+# differential scenarios (acceptance: >= 3, identical generated tokens,
+# per-step scheduled tokens never over budget — checked by the harness)
+# ---------------------------------------------------------------------------
+
+
+def test_long_prompt_equivalence(smollm):
+    """A prompt several times the token budget prefills across steps
+    (PREFILLING in-flight state) and generates exactly the unchunked —
+    and dense-reference — tokens."""
+    cfg, params = smollm
+    rng = np.random.default_rng(0)
+    prompts = H.make_prompts(cfg, rng, (3 * BUDGET + 12, 9, 2 * BUDGET + 5))
+    base = H.run_requests(
+        H.build_engine(cfg, params), prompts, max_new_tokens=6)
+    chunked = H.run_requests(
+        H.build_engine(cfg, params, enable_chunked_prefill=True,
+                       max_prefill_tokens=BUDGET),
+        prompts, max_new_tokens=6)
+    H.assert_same_outputs(base, chunked, label_a="unchunked",
+                          label_b="chunked")
+    # chunking actually happened: partial chunks were scheduled, and the
+    # long prompts took multiple steps to absorb
+    assert chunked.total("partial_prefills") >= 3
+    assert chunked.num_steps > base.num_steps
+    # and both match the dense ground truth
+    assert chunked.outputs[0] == H.greedy_reference(
+        cfg, params, prompts[0], 6)
+
+
+def test_mixed_prefill_decode_equivalence(smollm):
+    """Partial prefill chunks share steps with ongoing decodes (the ITL
+    protection chunking exists for): some step must mix decode > 0 with a
+    partial prefill, and outputs still match the unchunked engine."""
+    cfg, params = smollm
+    rng = np.random.default_rng(1)
+    prompts = H.make_prompts(cfg, rng, (8, 3 * BUDGET + 7, 5, 2 * BUDGET))
+    base = H.run_requests(
+        H.build_engine(cfg, params), prompts, max_new_tokens=8)
+    chunked = H.run_requests(
+        H.build_engine(cfg, params, enable_chunked_prefill=True,
+                       max_prefill_tokens=BUDGET),
+        prompts, max_new_tokens=8)
+    H.assert_same_outputs(base, chunked, label_a="unchunked",
+                          label_b="chunked")
+    assert any(s["decode"] > 0 and s["partial_prefills"] > 0
+               for s in chunked.step_stats), \
+        "no step mixed decodes with a partial prefill"
+
+
+def test_shared_prefix_equivalence(smollm):
+    """All four scheduler configurations — {chunked, unchunked} x {cached,
+    uncached} — generate identical tokens on a shared-prefix workload; the
+    cached+chunked engine computes the fewest prompt tokens (a cache hit
+    is just a chunk that starts at context = matched_len)."""
+    cfg, params = smollm
+    rng = np.random.default_rng(2)
+    prompts = H.shared_prefix_prompts(cfg, rng, 3 * BUDGET, (7, 12, 9, 5))
+    runs = {}
+    for chunked in (False, True):
+        for cached in (False, True):
+            eng = H.build_engine(
+                cfg, params, max_seqs=2,
+                enable_chunked_prefill=chunked,
+                enable_prefix_caching=cached,
+                max_prefill_tokens=BUDGET if chunked else 8192)
+            runs[chunked, cached] = H.run_requests(
+                eng, prompts, max_new_tokens=6)
+    for key, run in runs.items():
+        H.assert_same_outputs(runs[False, False], run,
+                              label_a="baseline", label_b=str(key))
+    total = sum(len(p) for p in prompts)
+    assert runs[False, False].engine.prefilled_tokens == total
+    assert runs[True, True].engine.prefilled_tokens \
+        < runs[True, False].engine.prefilled_tokens == total
+    assert runs[True, True].engine.cached_prefill_tokens > 0
+
+
+def test_pallas_backend_equivalence(smollm):
+    """Chunk-resume runs the paper's ragged Q-Block kernel (interpret
+    mode): chunked == unchunked on the pallas backend too."""
+    cfg, params = smollm
+    rng = np.random.default_rng(3)
+    prompts = H.make_prompts(cfg, rng, (2 * BUDGET + 9, 7))
+    runs = [
+        H.run_requests(
+            H.build_engine(cfg, params, max_seqs=1, max_model_len=128,
+                           backend="pallas", enable_chunked_prefill=chunked,
+                           max_prefill_tokens=BUDGET if chunked else 8192),
+            prompts, max_new_tokens=4)
+        for chunked in (False, True)
+    ]
+    H.assert_same_outputs(runs[0], runs[1], label_a="unchunked",
+                          label_b="chunked")
+    assert runs[1].total("partial_prefills") > 0
+
+
+def test_preempt_resume_equivalence(smollm):
+    """A starved page pool preempts chunked prefills mid-prompt; donated
+    pages plus chunk-resume still produce the ample-pool outputs."""
+    cfg, params = smollm
+    rng = np.random.default_rng(4)
+    prompts = H.make_prompts(cfg, rng, (3 * BUDGET + 10, 3 * BUDGET + 2))
+    runs = [
+        H.run_requests(
+            H.build_engine(cfg, params, max_seqs=2, num_pages=num_pages,
+                           max_model_len=128,
+                           enable_chunked_prefill=True,
+                           enable_prefix_caching=True,
+                           max_prefill_tokens=BUDGET),
+            prompts, max_new_tokens=8)
+        for num_pages in (64, 8)  # ample vs starved
+    ]
+    H.assert_same_outputs(runs[0], runs[1], label_a="ample",
+                          label_b="starved")
+    assert runs[1].total("preempted") > 0, "pool never starved"
+
+
+def test_cache_hit_lands_mid_chunk(smollm):
+    """A prefix-cache hit starts the FIRST chunk mid-prompt (context =
+    matched_len, not a chunk-grid multiple) and the remainder still chunks
+    against the budget — outputs match the plain engine."""
+    cfg, params = smollm
+    rng = np.random.default_rng(5)
+    ps = cfg.page_size
+    stem = H.make_prompts(cfg, rng, (2 * ps + 9,))[0]  # 2 full pages cached
+    long_prompt = stem + H.make_prompts(cfg, rng, (3 * BUDGET + 3,))[0]
+    base = H.run_requests(
+        H.build_engine(cfg, params), [stem, long_prompt], max_new_tokens=6)
+    eng = H.build_engine(cfg, params, max_seqs=1,
+                         enable_chunked_prefill=True,
+                         enable_prefix_caching=True,
+                         max_prefill_tokens=BUDGET)
+    run = H.run_requests(eng, [stem, long_prompt], max_new_tokens=6)
+    H.assert_same_outputs(base, run, label_a="plain", label_b="cached")
+    # the long prompt's first chunk resumed at the matched prefix …
+    assert run.requests[1].num_cached_tokens == 2 * ps
+    # … which is mid-prompt and off the chunk grid, and the tail was
+    # still chunked (cheaper than one unchunked resume)
+    assert 0 < run.requests[1].num_cached_tokens \
+        < run.requests[1].num_prompt_tokens
+    assert run.total("partial_prefills") > 0
+    assert eng.prefilled_tokens \
+        == sum(len(p) for p in (stem, long_prompt)) - 2 * ps
+
+
+# ---------------------------------------------------------------------------
+# scheduler edge cases (host-side only, no jax)
+# ---------------------------------------------------------------------------
+
+PS = 4  # small page size keeps the arithmetic readable
+
+
+def _sched(num_pages=32, max_seqs=4, budget=8, chunked=True):
+    alloc = RefCountedPageAllocator(num_pages, PS)
+    return Scheduler(alloc, max_seqs=max_seqs, max_prefill_tokens=budget,
+                     enable_chunked_prefill=chunked)
+
+
+def _execute(sched, dec):
+    """Engine-analog for scheduler-only tests: pretend the chunks/decodes
+    ran — advance written-KV marks and append decoded tokens."""
+    for r in dec.prefill_reqs:
+        assert r.num_scheduled_tokens > 0, "empty chunk scheduled"
+        r.context_len = r.chunk_start + r.num_scheduled_tokens
+        if r.prefill_done:
+            r.output.append(100 + r.req_id)
+    for r in dec.decode_reqs:
+        r.output.append(200 + len(r.output))
+        r.context_len = r.total_len - 1
+    for r in list(sched.running):
+        if r.prefill_done and r.done:
+            sched.finish(r)
+
+
+def test_prompt_exactly_equal_to_budget():
+    """A prompt of exactly the budget schedules as ONE whole chunk — no
+    PREFILLING round-trip, straight to RUNNING."""
+    sched = _sched(budget=8)
+    [req] = make_requests([list(range(8))], max_new_tokens=2)
+    sched.add(req)
+    dec = sched.step(0)
+    assert dec.prefill_reqs == [req]
+    assert req.num_scheduled_tokens == 8 and req.chunk_start == 0
+    assert req.state is State.RUNNING and req.prefill_done
+    # one token over the budget → two chunks, PREFILLING in between
+    [req9] = make_requests([list(range(9))], max_new_tokens=2)
+    sched9 = _sched(budget=8)
+    sched9.add(req9)
+    dec = sched9.step(0)
+    assert req9.state is State.PREFILLING
+    assert req9.num_scheduled_tokens == 8
+    _execute(sched9, dec)
+    dec = sched9.step(1)
+    assert req9.num_scheduled_tokens == 1 and req9.chunk_start == 8
+    assert req9.state is State.RUNNING
+
+
+def test_admission_never_schedules_empty_chunk():
+    """Budget exhausted by an in-flight chunk: the admission loop must NOT
+    admit a request with a 0-token first chunk (the empty-prefill-batch
+    bug), and the starved request is admitted next step."""
+    sched = _sched(budget=8)
+    long_req, short_req = make_requests([list(range(20)), list(range(4))],
+                                        max_new_tokens=2)
+    sched.add(long_req)
+    dec = sched.step(0)
+    _execute(sched, dec)
+    sched.add(short_req)
+    dec = sched.step(1)  # the long chunk eats the whole budget
+    assert dec.prefill_reqs == [long_req]
+    assert short_req.state is State.WAITING and short_req.slot is None
+    assert all(r.num_scheduled_tokens > 0 for r in dec.prefill_reqs)
+    _execute(sched, dec)
+    dec = sched.step(2)  # long prefill done (4 left) → short admitted
+    assert short_req in dec.prefill_reqs
+    assert dec.scheduled_prefill_tokens <= 8
+
+
+def test_decodes_charge_the_chunked_budget():
+    """With chunking on, scheduled decodes consume the per-step token
+    budget; prefill chunks only get the remainder."""
+    sched = _sched(budget=4)
+    reqs = make_requests([[1, 2], [3], [4]], max_new_tokens=4)
+    for r in reqs:
+        sched.add(r)
+    dec = sched.step(0)  # 2+1+1 tokens: all admitted whole
+    assert dec.scheduled_prefill_tokens == 4
+    _execute(sched, dec)
+    late = make_requests([list(range(10))], max_new_tokens=2)[0]
+    sched.add(late)
+    dec = sched.step(1)  # 3 decodes charge 3 of 4 → a 1-token first chunk
+    assert len(dec.decode_reqs) == 3
+    assert dec.scheduled_prefill_tokens == 1
+    assert late.state is State.PREFILLING and late.num_scheduled_tokens == 1
+    assert dec.scheduled_prefill_tokens + len(dec.decode_reqs) <= 4
+
+
+def test_chunked_prefill_preempted_mid_prompt_and_resumed():
+    """An older request's decode growth evicts the younger PREFILLING
+    request mid-prompt (state reset, progress rewound, pages conserved);
+    the victim is re-admitted, chunks again, and runs to completion."""
+    # 6 usable pages (PS=4): old grows to 17 tokens = 5 pages while the
+    # young 12-token prompt chunks 3 tokens/step against budget 4
+    sched = _sched(num_pages=7, max_seqs=2, budget=4)
+    [old] = make_requests([list(range(8))], max_new_tokens=9)
+    sched.add(old)
+    _execute(sched, sched.step(0))  # old: chunk 4, PREFILLING
+    _execute(sched, sched.step(1))  # old: chunk 4 → RUNNING
+    [young] = make_requests([list(range(300, 312))], max_new_tokens=2)
+    sched.add(young)
+    step = 2
+    preempted_mid_prompt = False
+    while sched.has_work and step < 60:
+        was_prefilling = young.state is State.PREFILLING
+        progress = young.num_computed_tokens
+        dec = sched.step(step)
+        if young in dec.preempted and was_prefilling:
+            preempted_mid_prompt = True
+            assert 0 < progress < young.num_prompt_tokens
+            # progress rewound: either still waiting, or re-admitted this
+            # very step and restarted from its first chunk
+            if young.state is State.PREEMPTED:
+                assert young.num_computed_tokens == 0
+                assert young.pages == [] and young.slot is None
+            else:
+                assert young.chunk_start == 0
+                assert young.num_computed_tokens \
+                    == young.num_scheduled_tokens
+        sched.alloc.check_invariants([r.pages for r in sched.running])
+        _execute(sched, dec)
+        step += 1
+    assert preempted_mid_prompt, "the young prefill was never preempted"
+    assert old.state is State.FINISHED and young.state is State.FINISHED
+    assert len(old.output) == 9 and len(young.output) == 2
+    assert sched.alloc.free_pages == 6  # all pages conserved
+
+
+def test_chunked_prefill_rejects_unsupported_families():
+    """Chunk-resume needs page-addressable context: SSM/hybrid recurrent
+    state cannot restart mid-prompt.  (The gate fires before params are
+    touched, so none are built.)"""
+    from repro.configs import ARCHS, reduced
+    cfg = reduced(ARCHS["xlstm-350m"]).replace(dtype="float32")
+    with pytest.raises(AssertionError):
+        H.build_engine(cfg, None, max_seqs=2, num_pages=16,
+                       max_model_len=64, enable_chunked_prefill=True)
+
+
+def test_oversized_request_rejected_at_submission():
+    """A request whose prompt + decode growth can never be resident in
+    the pool is rejected by add() — it would otherwise wait forever and
+    head-of-line block the queue (in both modes)."""
+    sched = _sched(num_pages=4, budget=8)  # 3 usable pages = 12 tokens
+    [req] = make_requests([list(range(16))], max_new_tokens=2)
+    with pytest.raises(AssertionError):
+        sched.add(req)
+    # decode growth counts too: a 12-token prompt fits, but +2 new
+    # tokens crosses into a 4th page the pool doesn't have
+    [req2] = make_requests([list(range(12))], max_new_tokens=2)
+    with pytest.raises(AssertionError):
+        sched.add(req2)
+    [ok] = make_requests([list(range(10))], max_new_tokens=2)
+    sched.add(ok)  # 12 tokens total: exactly resident
+
+
+def test_pool_overflow_after_preemption_growth_finishes_not_hangs():
+    """Preemption folds generated tokens into the prompt; if that pushes a
+    request past pool capacity it is finished (with what it produced)
+    instead of blocking the wait queue forever."""
+    sched = _sched(num_pages=4, budget=8)
+    [grown] = make_requests([list(range(11))], max_new_tokens=4)
+    grown.prompt = grown.prompt + [900, 901]  # preemption-style growth
+    sched.waiting.append(grown)  # bypasses add(), like _preempt does
+    [ok] = make_requests([[1, 2, 3]], max_new_tokens=2)
+    sched.add(ok)
+    dec = sched.step(0)
+    assert grown.state is State.FINISHED and grown not in sched.waiting
+    assert ok in dec.prefill_reqs  # the queue behind it is NOT blocked

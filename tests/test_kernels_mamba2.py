@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # kernel sweep: excluded from -m \"not slow\"
+
 from repro.kernels.mamba2 import (
     decode_step,
     mamba2_ssd,

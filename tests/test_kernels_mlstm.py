@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # kernel sweep: excluded from -m \"not slow\"
+
 from repro.kernels.mlstm import (
     decode_step,
     mlstm,

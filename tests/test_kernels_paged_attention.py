@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow  # kernel sweep: excluded from -m \"not slow\"
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # collect-and-skip fallback (requirements-dev.txt)

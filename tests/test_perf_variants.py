@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # kernel sweep: excluded from -m \"not slow\"
+
 from repro.configs import ARCHS, reduced
 from repro.models import model as M
 

@@ -1,7 +1,10 @@
 """Prefix-caching subsystem: hash-chained content addressing, ref-counted
 page sharing, LRU eviction under pressure, and engine-level equivalence
-(cache on == cache off, strictly fewer prefilled tokens)."""
-import jax
+(cache on == cache off, strictly fewer prefilled tokens).
+
+Engine plumbing (build/run/compare) lives in serving_harness.py — shared
+with test_serving_engine.py and test_chunked_prefill.py.
+"""
 import numpy as np
 import pytest
 
@@ -10,14 +13,11 @@ try:
 except ImportError:  # collect-and-skip fallback (requirements-dev.txt)
     from _hypothesis_fallback import given, settings, st
 
-from repro.configs import ARCHS, reduced
+import serving_harness as H
 from repro.core.paged.allocator import (
     OutOfPages, PageAllocator, RefCountedPageAllocator,
 )
-from repro.models import model as M
-from repro.serving.engine import Engine
 from repro.serving.prefix_cache import PrefixCache, chain_keys
-from repro.serving.request import State, make_requests
 
 PS = 16  # page size used by the reduced configs
 
@@ -178,15 +178,7 @@ def test_refcount_invariants_under_pressure(data):
 
 @pytest.fixture(scope="module")
 def smollm():
-    cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
-    params = M.init(cfg, jax.random.key(0))
-    return cfg, params
-
-
-def _shared_prefix_prompts(cfg, rng, prefix_len, tails):
-    shared = list(rng.integers(1, cfg.vocab_size, size=prefix_len))
-    return [shared + list(rng.integers(1, cfg.vocab_size, size=n))
-            for n in tails]
+    return H.build_cfg_params()
 
 
 def test_engine_equivalence_shared_prefix(smollm):
@@ -194,32 +186,26 @@ def test_engine_equivalence_shared_prefix(smollm):
     tokens, and hit/miss/eviction stats surfaced by step()."""
     cfg, params = smollm
     rng = np.random.default_rng(7)
-    prompts = _shared_prefix_prompts(cfg, rng, 40, (7, 12, 9, 5))
-    results, prefilled = {}, {}
+    prompts = H.shared_prefix_prompts(cfg, rng, 40, (7, 12, 9, 5))
+    runs = {}
     for cache_on in (False, True):
-        eng = Engine(cfg, params, max_seqs=2, num_pages=64,
-                     max_model_len=256, enable_prefix_caching=cache_on)
-        reqs = make_requests([list(p) for p in prompts], max_new_tokens=6)
-        for r in reqs:
-            eng.add_request(r)
-        last_stats = None
-        while eng.sched.has_work:
-            last_stats = eng.step()
-        results[cache_on] = [r.output for r in reqs]
-        prefilled[cache_on] = eng.prefilled_tokens
-        assert all(r.state is State.FINISHED for r in reqs)
-        assert eng.alloc.free_pages == eng.num_pages - 1
+        runs[cache_on] = H.run_requests(
+            H.build_engine(cfg, params, max_seqs=2,
+                           enable_prefix_caching=cache_on),
+            prompts, max_new_tokens=6)
         if cache_on:
+            last_stats = runs[cache_on].last_stats
             for key in ("cache_hits", "cache_misses", "cache_evictions",
                         "prefill_tokens", "cached_tokens"):
                 assert key in last_stats, key
             assert last_stats["cache_hits"] >= 2
-            assert eng.cached_prefill_tokens > 0
-    assert results[True] == results[False]
-    assert prefilled[True] < prefilled[False]
+            assert runs[cache_on].engine.cached_prefill_tokens > 0
+    H.assert_same_outputs(runs[False], runs[True], label_a="cache off",
+                          label_b="cache on")
     total = sum(len(p) for p in prompts)
-    assert prefilled[False] == total
-    assert prefilled[True] == total - 2 * (40 // cfg.page_size) * cfg.page_size
+    assert runs[False].engine.prefilled_tokens == total
+    assert runs[True].engine.prefilled_tokens \
+        == total - 2 * (40 // cfg.page_size) * cfg.page_size
 
 
 def test_engine_equivalence_pallas_backend(smollm):
@@ -227,18 +213,18 @@ def test_engine_equivalence_pallas_backend(smollm):
     path runs the paper's ragged Q-Block kernel."""
     cfg, params = smollm
     rng = np.random.default_rng(8)
-    prompts = _shared_prefix_prompts(cfg, rng, 40, (7, 12))
-    results = {}
+    prompts = H.shared_prefix_prompts(cfg, rng, 40, (7, 12))
+    runs = {}
     for cache_on in (False, True):
-        eng = Engine(cfg, params, max_seqs=1, num_pages=64,
-                     max_model_len=128, backend="pallas",
-                     enable_prefix_caching=cache_on)
-        reqs = make_requests([list(p) for p in prompts], max_new_tokens=4)
-        eng.generate(reqs)
-        results[cache_on] = [r.output for r in reqs]
+        runs[cache_on] = H.run_requests(
+            H.build_engine(cfg, params, max_seqs=1, max_model_len=128,
+                           backend="pallas",
+                           enable_prefix_caching=cache_on),
+            prompts, max_new_tokens=4)
         if cache_on:
-            assert eng.cached_prefill_tokens == 32
-    assert results[True] == results[False]
+            assert runs[cache_on].engine.cached_prefill_tokens == 32
+    H.assert_same_outputs(runs[False], runs[True], label_a="cache off",
+                          label_b="cache on")
 
 
 def test_engine_eviction_under_pressure(smollm):
@@ -246,17 +232,16 @@ def test_engine_eviction_under_pressure(smollm):
     completes with exact outputs."""
     cfg, params = smollm
     rng = np.random.default_rng(9)
-    prompts = _shared_prefix_prompts(cfg, rng, 32, (6, 4, 8, 5, 7))
-    results = {}
+    prompts = H.shared_prefix_prompts(cfg, rng, 32, (6, 4, 8, 5, 7))
+    runs = {}
     for cache_on, num_pages in ((False, 64), (True, 12)):
-        eng = Engine(cfg, params, max_seqs=2, num_pages=num_pages,
-                     max_model_len=128, enable_prefix_caching=cache_on)
-        reqs = make_requests([list(p) for p in prompts], max_new_tokens=8)
-        eng.generate(reqs)
-        results[cache_on] = [r.output for r in reqs]
-        assert all(r.state is State.FINISHED for r in reqs)
-        assert eng.alloc.free_pages == eng.num_pages - 1
-    assert results[True] == results[False]
+        runs[cache_on] = H.run_requests(
+            H.build_engine(cfg, params, max_seqs=2, num_pages=num_pages,
+                           max_model_len=128,
+                           enable_prefix_caching=cache_on),
+            prompts, max_new_tokens=8)
+    H.assert_same_outputs(runs[False], runs[True], label_a="cache off",
+                          label_b="cache on (starved)")
 
 
 def test_engine_preemption_with_caching(smollm):
@@ -264,24 +249,23 @@ def test_engine_preemption_with_caching(smollm):
     outputs still match the ample-pool run."""
     cfg, params = smollm
     rng = np.random.default_rng(10)
-    prompts = _shared_prefix_prompts(cfg, rng, 16, (8, 8))
-    out = []
-    for num_pages in (64, 7):  # ample vs starved (forces preemption)
-        eng = Engine(cfg, params, max_seqs=2, num_pages=num_pages,
-                     max_model_len=64, enable_prefix_caching=True)
-        reqs = make_requests([list(p) for p in prompts], max_new_tokens=8)
-        eng.generate(reqs)
-        out.append([r.output for r in reqs])
-        assert all(r.state is State.FINISHED for r in reqs)
-    assert out[0] == out[1]
+    prompts = H.shared_prefix_prompts(cfg, rng, 16, (8, 8))
+    runs = [
+        H.run_requests(
+            H.build_engine(cfg, params, max_seqs=2, num_pages=num_pages,
+                           max_model_len=64, enable_prefix_caching=True),
+            prompts, max_new_tokens=8)
+        for num_pages in (64, 7)  # ample vs starved (forces preemption)
+    ]
+    H.assert_same_outputs(runs[0], runs[1], label_a="ample",
+                          label_b="starved")
 
 
 def test_prefix_caching_rejects_unsupported_families(smollm):
-    cfg = reduced(ARCHS["xlstm-350m"]).replace(dtype="float32")
-    params = M.init(cfg, jax.random.key(0))
+    cfg, params = H.build_cfg_params("xlstm-350m")
     with pytest.raises(AssertionError):
-        Engine(cfg, params, max_seqs=2, num_pages=16, max_model_len=64,
-               enable_prefix_caching=True)
+        H.build_engine(cfg, params, max_seqs=2, num_pages=16,
+                       max_model_len=64, enable_prefix_caching=True)
 
 
 def test_multi_turn_reuse(smollm):
@@ -289,18 +273,16 @@ def test_multi_turn_reuse(smollm):
     re-admits with the donated pages as its cached prefix."""
     cfg, params = smollm
     rng = np.random.default_rng(11)
-    eng = Engine(cfg, params, max_seqs=2, num_pages=64, max_model_len=256,
-                 enable_prefix_caching=True)
+    eng = H.build_engine(cfg, params, max_seqs=2,
+                         enable_prefix_caching=True)
     turn1 = list(rng.integers(1, cfg.vocab_size, size=30))
-    [r1] = make_requests([list(turn1)], max_new_tokens=8)
-    eng.generate([r1])
+    run1 = H.run_requests(eng, [turn1], max_new_tokens=8)
     assert eng.prefix_cache.hits == 0
     # turn 2: conversation so far + the tokens whose KV was written
-    convo = turn1 + r1.output
+    convo = turn1 + run1.outputs[0]
     turn2 = convo + list(rng.integers(1, cfg.vocab_size, size=10))
-    [r2] = make_requests([list(turn2)], max_new_tokens=8)
-    eng.generate([r2])
+    run2 = H.run_requests(eng, [turn2], max_new_tokens=8)
     assert eng.prefix_cache.hits == 1
     # everything written in turn 1 except the partial tail page is reused
     reusable = ((len(convo) - 1) // cfg.page_size) * cfg.page_size
-    assert r2.num_cached_tokens == reusable
+    assert run2.requests[0].num_cached_tokens == reusable

@@ -1,6 +1,8 @@
-"""Serving engine: continuous batching, paging, preemption, exactness."""
-import jax
-import jax.numpy as jnp
+"""Serving engine: continuous batching, paging, preemption, exactness.
+
+Engine plumbing (build/run/compare) lives in serving_harness.py — shared
+with test_prefix_cache.py and test_chunked_prefill.py.
+"""
 import numpy as np
 import pytest
 try:
@@ -8,77 +10,53 @@ try:
 except ImportError:  # collect-and-skip fallback (requirements-dev.txt)
     from _hypothesis_fallback import given, settings, st
 
-from repro.configs import ARCHS, reduced
+import serving_harness as H
 from repro.core.paged.allocator import OutOfPages, PageAllocator
-from repro.models import model as M
-from repro.serving.engine import Engine
-from repro.serving.request import State, make_requests
 
 
 @pytest.fixture(scope="module")
 def smollm():
-    cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
-    params = M.init(cfg, jax.random.key(0))
-    return cfg, params
-
-
-def _prompts(cfg, rng, lens):
-    return [list(rng.integers(1, cfg.vocab_size, size=n)) for n in lens]
+    return H.build_cfg_params()
 
 
 def test_engine_greedy_matches_dense(smollm):
     cfg, params = smollm
-    eng = Engine(cfg, params, max_seqs=4, num_pages=64, max_model_len=256)
     rng = np.random.default_rng(0)
-    prompts = _prompts(cfg, rng, (17, 5))
-    reqs = make_requests(prompts, max_new_tokens=8)
-    eng.generate(reqs)
-    for p, r in zip(prompts, reqs):
-        toks = list(p)
-        for _ in range(8):
-            x = jnp.asarray(toks)[None]
-            logits, _, _ = M.forward(
-                cfg, params, x, M.default_positions(cfg, 1, len(toks)),
-                mode="train",
-            )
-            toks.append(int(jnp.argmax(logits[0, -1])))
-        assert r.output == toks[len(p):], r.req_id
+    prompts = H.make_prompts(cfg, rng, (17, 5))
+    run = H.run_requests(H.build_engine(cfg, params), prompts,
+                         max_new_tokens=8)
+    for p, out in zip(prompts, run.outputs):
+        assert out == H.greedy_reference(cfg, params, p, 8)
 
 
 def test_engine_more_requests_than_slots(smollm):
     cfg, params = smollm
-    eng = Engine(cfg, params, max_seqs=2, num_pages=64, max_model_len=128)
     rng = np.random.default_rng(1)
-    reqs = make_requests(_prompts(cfg, rng, (9, 3, 17, 5, 8)),
-                         max_new_tokens=4)
-    eng.generate(reqs)
-    assert all(r.state is State.FINISHED for r in reqs)
-    assert all(len(r.output) == 4 for r in reqs)
-    # all pages returned
-    assert eng.alloc.free_pages == eng.num_pages - 1
+    run = H.run_requests(
+        H.build_engine(cfg, params, max_seqs=2, max_model_len=128),
+        H.make_prompts(cfg, rng, (9, 3, 17, 5, 8)), max_new_tokens=4)
+    assert all(len(out) == 4 for out in run.outputs)
 
 
 def test_engine_preemption_under_page_pressure(smollm):
     cfg, params = smollm
     # tiny pool: 2 requests cannot both hold their full length
-    eng = Engine(cfg, params, max_seqs=2, num_pages=7, max_model_len=64)
     rng = np.random.default_rng(2)
-    reqs = make_requests(_prompts(cfg, rng, (30, 30)), max_new_tokens=16)
-    eng.generate(reqs)
-    assert all(r.state is State.FINISHED for r in reqs)
-    assert all(len(r.output) == 16 for r in reqs)
-    assert eng.alloc.free_pages == eng.num_pages - 1
+    run = H.run_requests(
+        H.build_engine(cfg, params, max_seqs=2, num_pages=7,
+                       max_model_len=64),
+        H.make_prompts(cfg, rng, (30, 30)), max_new_tokens=16)
+    assert all(len(out) == 16 for out in run.outputs)
 
 
 def test_engine_static_decode_batch_and_bucketing(smollm):
     """The CUDA-graph-analog: decode always compiles ONE executable (static
     max_seqs batch); prefill compiles one per (batch, seq) bucket."""
     cfg, params = smollm
-    eng = Engine(cfg, params, max_seqs=4, num_pages=64, max_model_len=256)
     rng = np.random.default_rng(3)
-    reqs = make_requests(_prompts(cfg, rng, (5, 9, 17, 33, 12, 7)),
-                         max_new_tokens=4)
-    eng.generate(reqs)
+    eng = H.build_engine(cfg, params)
+    H.run_requests(eng, H.make_prompts(cfg, rng, (5, 9, 17, 33, 12, 7)),
+                   max_new_tokens=4)
     decode_events = [e for e in eng.compile_events if e[0] == "decode"]
     assert decode_events == [("decode", 4, 1)]
     for kind, b, s in eng.compile_events:
@@ -86,28 +64,20 @@ def test_engine_static_decode_batch_and_bucketing(smollm):
         assert s & (s - 1) == 0 or s == 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["zamba2-1.2b", "xlstm-350m"])
 def test_engine_ssm_archs(arch):
     """Hybrid/SSM archs serve through the engine (state caches + pages)."""
-    cfg = reduced(ARCHS[arch]).replace(dtype="float32")
-    params = M.init(cfg, jax.random.key(0))
-    eng = Engine(cfg, params, max_seqs=2, num_pages=32, max_model_len=128)
+    cfg, params = H.build_cfg_params(arch)
     rng = np.random.default_rng(4)
-    prompts = _prompts(cfg, rng, (12, 20, 7))
-    reqs = make_requests(prompts, max_new_tokens=4)
-    eng.generate(reqs)
-    assert all(r.state is State.FINISHED for r in reqs)
+    prompts = H.make_prompts(cfg, rng, (12, 20, 7))
+    run = H.run_requests(
+        H.build_engine(cfg, params, max_seqs=2, num_pages=32,
+                       max_model_len=128),
+        prompts, max_new_tokens=4)
     # exactness vs dense forward (recurrent caches must carry across steps)
-    for p, r in zip(prompts, reqs):
-        toks = list(p)
-        for _ in range(4):
-            x = jnp.asarray(toks)[None]
-            logits, _, _ = M.forward(
-                cfg, params, x, M.default_positions(cfg, 1, len(toks)),
-                mode="train",
-            )
-            toks.append(int(jnp.argmax(logits[0, -1])))
-        assert r.output == toks[len(p):], (arch, r.req_id)
+    for p, out in zip(prompts, run.outputs):
+        assert out == H.greedy_reference(cfg, params, p, 4), arch
 
 
 # ---------------------------------------------------------------------------
@@ -141,12 +111,13 @@ def test_scheduler_conserves_tokens(smollm):
     """Preempted-and-resumed requests still produce the same greedy text."""
     cfg, params = smollm
     rng = np.random.default_rng(5)
-    prompts = _prompts(cfg, rng, (24, 24))
-    out = []
-    for num_pages in (64, 7):  # ample vs starved (forces preemption)
-        eng = Engine(cfg, params, max_seqs=2, num_pages=num_pages,
-                     max_model_len=64)
-        reqs = make_requests(prompts, max_new_tokens=8)
-        eng.generate(reqs)
-        out.append([r.output for r in reqs])
-    assert out[0] == out[1]
+    prompts = H.make_prompts(cfg, rng, (24, 24))
+    runs = [
+        H.run_requests(
+            H.build_engine(cfg, params, max_seqs=2, num_pages=num_pages,
+                           max_model_len=64),
+            prompts, max_new_tokens=8)
+        for num_pages in (64, 7)  # ample vs starved (forces preemption)
+    ]
+    H.assert_same_outputs(runs[0], runs[1], label_a="ample",
+                          label_b="starved")
