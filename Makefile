@@ -1,7 +1,7 @@
 # Tier-1 verification (ROADMAP.md): the whole suite, fail-fast.
 PY ?= python
 
-.PHONY: test test-full test-fast bench deps-dev
+.PHONY: test test-full test-fast bench tune deps-dev
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -10,15 +10,23 @@ test-full:
 	PYTHONPATH=src $(PY) -m pytest -q
 
 # Serving + scheduler subset (<60s): the chunked-prefill differential
-# suite, engine/scheduler behavior, and the allocator property tests —
-# kernel sweeps and arch matrices (-m slow) don't gate it.
+# suite, engine/scheduler behavior, the allocator property tests, and the
+# autotune sweep/round-trip tests — kernel sweeps and arch matrices
+# (-m slow) don't gate it.
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" \
 	  tests/test_chunked_prefill.py tests/test_serving_engine.py \
-	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py
+	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py \
+	  tests/test_autotune.py
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/run.py
+
+# Offline autotune (paper Fig. 5): cost-model sweep -> decision trees +
+# chunk budget in tuned/attn.{json,py} — seconds on a CPU host.  Serve
+# with `--heuristics tuned/attn.json` or REPRO_ATTN_HEURISTICS.
+tune:
+	PYTHONPATH=src $(PY) examples/autotune_attn.py --out tuned/attn
 
 deps-dev:
 	$(PY) -m pip install -r requirements-dev.txt

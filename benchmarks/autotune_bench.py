@@ -20,3 +20,9 @@ def run(emit):
          "paper reports up to 9.8x on short prompts (H100)")
     emit("fig8/tuned_vs_oracle_overhead", rep["tuned_vs_oracle_overhead"],
          "regret of the depth-3 tree vs per-scenario oracle")
+    emit("fig8/prefill_tuned_vs_untuned_speedup",
+         rep["prefill"]["tuned_vs_untuned_speedup"],
+         "prefill tree over the prefill sub-batch grid")
+    emit("fig8/suggested_max_prefill_tokens",
+         rep["suggested_max_prefill_tokens"],
+         "chunk budget from the decode-latency roofline")

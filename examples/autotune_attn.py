@@ -1,0 +1,85 @@
+"""Offline attention autotuner — the paper's Fig. 5 workflow as a CLI.
+
+Autotuning workflow (sweep -> JSON -> serve):
+
+  1. **Sweep**: `microbench.scenario_grid` generates a realistic request
+     mix (batch sizes x context lengths x decode shares); each scenario is
+     split into its decode / prefill sub-batches and every KernelConfig in
+     DECODE_SPACE / PREFILL_SPACE is timed — the analytic cost model on a
+     CPU host, the real Pallas kernels on TPU (`--hardware`).
+  2. **Fit + export**: `tune.tune_and_export` fits one regret-minimizing
+     decision tree per phase and writes
+       - `<out>.json`  — `decode_tree` + `prefill_tree` (first-match
+         condition lists consumed by `heuristics.load`) plus the
+         roofline-derived `suggested_max_prefill_tokens` chunk budget;
+       - `<out>.py`    — the human-readable Listing-2-style snippet.
+  3. **Serve**: install the tree in the engine with either
+       `python examples/serve_paged.py --heuristics <out>.json`
+     or the environment hook the engine checks at init:
+       `REPRO_ATTN_HEURISTICS=<out>.json python examples/serve_paged.py`
+     Per-step kernel choices surface in `Engine.step()['dispatch']` and
+     cumulatively in `Engine.dispatch_counts`; executables are cached per
+     (bucket, KernelConfig) so variant switches replay captured graphs.
+
+    PYTHONPATH=src python examples/autotune_attn.py --out tuned/attn \
+        [--q-heads 32 --kv-heads 8 --head-dim 128 --page-size 16] \
+        [--max-seqs 8 --target-context 2048] [--hardware]
+"""
+import argparse
+import json
+import os
+
+from repro.autotune.tune import tune_and_export
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="sweep kernel configs, fit decision trees, export "
+                    "serving heuristics (paper Fig. 5)")
+    ap.add_argument("--out", default="tuned/attn", metavar="PREFIX",
+                    help="output prefix: writes PREFIX.json + PREFIX.py")
+    ap.add_argument("--q-heads", type=int, default=32)
+    ap.add_argument("--kv-heads", type=int, default=8)
+    ap.add_argument("--head-dim", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-seqs", type=int, default=8,
+                    help="decode batch width for the chunk-size roofline")
+    ap.add_argument("--target-context", type=int, default=2048,
+                    help="steady-state context for the chunk-size roofline")
+    ap.add_argument("--hardware", action="store_true",
+                    help="time the real Pallas kernels (TPU) instead of "
+                         "the analytic cost model")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    path_json, path_py = args.out + ".json", args.out + ".py"
+    rep = tune_and_export(
+        path_json, path_py, use_hardware=args.hardware, seed=args.seed,
+        max_seqs=args.max_seqs, target_context=args.target_context,
+        num_q_heads=args.q_heads, num_kv_heads=args.kv_heads,
+        head_dim=args.head_dim, page_size=args.page_size,
+    )
+
+    raw = json.load(open(path_json))
+    print(f"wrote {path_json} ({len(raw['decode_tree'])} decode leaves, "
+          f"{len(raw['prefill_tree'])} prefill leaves) and {path_py}")
+    print(f"\ndecode tree (Listing 2 analog):\n{rep['listing']}")
+    print(f"prefill tree:\n{rep['prefill']['listing']}")
+    print(f"decode: tuned-vs-best-fixed speedup "
+          f"{rep['tuned_vs_untuned_speedup']:.3f}x, "
+          f"max pointwise {rep['max_pointwise_speedup']:.2f}x, "
+          f"oracle overhead {rep['tuned_vs_oracle_overhead']:.1%}")
+    print(f"prefill: tuned-vs-best-fixed speedup "
+          f"{rep['prefill']['tuned_vs_untuned_speedup']:.3f}x")
+    print(f"chunked-prefill budget (decode-latency roofline): "
+          f"max_prefill_tokens={rep['suggested_max_prefill_tokens']}")
+    print(f"\nserve with it:\n"
+          f"  python examples/serve_paged.py --heuristics {path_json}\n"
+          f"  REPRO_ATTN_HEURISTICS={path_json} python examples/...")
+
+
+if __name__ == "__main__":
+    main()

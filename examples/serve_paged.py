@@ -36,26 +36,45 @@ def main():
                          "across steps (flat inter-token latency)")
     ap.add_argument("--max-prefill-tokens", type=int, default=None,
                     metavar="N", help="per-step token budget (default: "
-                    "32 when --chunked-prefill, else 8192)")
+                    "the tuned tree's roofline suggestion or 32 when "
+                    "--chunked-prefill, else 8192)")
+    ap.add_argument("--heuristics", default=None, metavar="TREE.json",
+                    help="autotune-exported decision trees (from "
+                         "examples/autotune_attn.py); default: run a "
+                         "quick cost-model tune inline. "
+                         "$REPRO_ATTN_HEURISTICS works too.")
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch]).replace(dtype="float32")
     params = M.init(cfg, jax.random.key(0))
 
-    # offline autotune -> decision-tree heuristics (paper §5 workflow)
-    from repro.autotune.tune import tune_and_export
-    with tempfile.TemporaryDirectory() as d:
-        path = os.path.join(d, "tree.json")
-        rep = tune_and_export(path, num_q_heads=cfg.num_q_heads,
-                              num_kv_heads=cfg.num_kv_heads,
-                              head_dim=cfg.resolved_head_dim,
-                              page_size=cfg.page_size)
-        heuristics.load(path)
-    print(f"heuristics installed (tuned-vs-fixed speedup "
-          f"{rep['tuned_vs_untuned_speedup']:.2f}x)")
+    if args.heuristics:
+        heuristics.load(args.heuristics)
+        print(f"heuristics installed from {args.heuristics}")
+    elif heuristics.maybe_load_env():
+        print(f"heuristics installed from $REPRO_ATTN_HEURISTICS "
+              f"({heuristics.loaded_path()})")
+    else:
+        # offline autotune -> decision-tree heuristics (paper §5 workflow)
+        from repro.autotune.tune import tune_and_export
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "tree.json")
+            rep = tune_and_export(path, num_q_heads=cfg.num_q_heads,
+                                  num_kv_heads=cfg.num_kv_heads,
+                                  head_dim=cfg.resolved_head_dim,
+                                  page_size=cfg.page_size)
+            heuristics.load(path)
+        print(f"heuristics installed (tuned-vs-fixed speedup "
+              f"{rep['tuned_vs_untuned_speedup']:.2f}x)")
 
-    budget = args.max_prefill_tokens if args.max_prefill_tokens is not None \
-        else (32 if args.chunked_prefill else 8192)
+    if args.max_prefill_tokens is not None:
+        budget = args.max_prefill_tokens
+    elif args.chunked_prefill:
+        # chunk-size autotuner: the tuned tree ships a roofline-derived
+        # per-step budget; fall back to the demo-scale constant
+        budget = heuristics.suggested_max_prefill_tokens() or 32
+    else:
+        budget = 8192
     eng = Engine(cfg, params, max_seqs=4, num_pages=96, max_model_len=256,
                  backend=args.backend,
                  enable_prefix_caching=args.prefix_caching,
@@ -76,16 +95,22 @@ def main():
         stats = eng.step()
         partial_chunks += stats["partial_prefills"]
         if steps % 10 == 0:
+            disp = ",".join(
+                f"{ph}:{d['variant']}" for ph, d in stats["dispatch"].items())
             print(f"step {steps:3d}: prefill={stats['prefill']} "
                   f"decode={stats['decode']} preempted={stats['preempted']} "
-                  f"free_pages={eng.alloc.free_pages}")
+                  f"free_pages={eng.alloc.free_pages} [{disp}]")
         steps += 1
     dt = time.perf_counter() - t0
     total = sum(len(r.output) for r in reqs)
     print(f"\n{args.requests} requests, {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s on this host)")
     print(f"graph captures: {len(eng.compile_events)} "
-          f"(static decode batch + pow2 prefill buckets)")
+          f"(static decode batch + pow2 prefill buckets, one per "
+          f"bucket x kernel-config)")
+    counts = ", ".join(f"{ph}/{var}={n}" for (ph, var), n
+                       in sorted(eng.dispatch_counts.items()))
+    print(f"kernel dispatch: {counts}")
     if args.chunked_prefill:
         print(f"chunked prefill: budget={budget} tokens/step, "
               f"{partial_chunks} partial chunks scheduled")

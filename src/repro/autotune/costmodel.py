@@ -65,6 +65,28 @@ class Scenario:
         return sum(self.query_lens) / max(len(self.query_lens), 1)
 
 
+def split_phases(s: Scenario) -> tuple[Scenario | None, Scenario | None]:
+    """(decode_sub, prefill_sub): the q==1 sequences and the q>1 sequences
+    as standalone scenarios (None for an empty phase).  A mixed batch runs
+    as TWO launches in the serving engine — one decode executable and one
+    prefill executable — so each phase must be costed against its own
+    sequences only; charging a prefill sequence's context to the decode
+    launch (or vice versa) double-counts the work."""
+    dec = [(c, q) for c, q in zip(s.context_lens, s.query_lens) if q == 1]
+    pre = [(c, q) for c, q in zip(s.context_lens, s.query_lens) if q > 1]
+
+    def sub(pairs):
+        if not pairs:
+            return None
+        return dataclasses.replace(
+            s, num_seqs=len(pairs),
+            context_lens=tuple(c for c, _ in pairs),
+            query_lens=tuple(q for _, q in pairs),
+        )
+
+    return sub(dec), sub(pre)
+
+
 def _mxu_time(flops: float, rows: int) -> float:
     occupancy = min(rows, MXU_ROWS) / MXU_ROWS
     return flops / (hw.PEAK_FLOPS_BF16 * max(occupancy, 1 / MXU_ROWS))
@@ -82,33 +104,41 @@ def decode_time(s: Scenario, *, variant: str, tile: int,
     if tile > s.page_size or s.page_size % tile or \
             2 * 2 * tile * s.head_dim * s.dtype_bytes > VMEM_BUDGET:
         return float("inf")
-    total_ctx = sum(c for c, q in zip(s.context_lens, s.query_lens))
+    # a decode launch only covers the q==1 sequences: in a mixed batch the
+    # q>1 sequences run through the separate prefill executable, so their
+    # context must not be charged here
+    dec_ctx = [c for c, q in zip(s.context_lens, s.query_lens) if q == 1]
+    if not dec_ctx:
+        return 0.0
+    n_dec = len(dec_ctx)
+    total_ctx = sum(dec_ctx)
+    max_ctx = max(dec_ctx)
     if variant == "baseline":
         # each q head re-streams its KV head's pages (C1)
         bytes_ = total_ctx * kv_row * s.num_q_heads
-        cells = s.num_seqs * s.num_q_heads
+        cells = n_dec * s.num_q_heads
         rows = 1
         segments = 1
     elif variant == "gqa":
         bytes_ = total_ctx * kv_row * s.num_kv_heads
-        cells = s.num_seqs * s.num_kv_heads
+        cells = n_dec * s.num_kv_heads
         rows = s.group
         segments = 1
     elif variant == "segmented":
         bytes_ = total_ctx * kv_row * s.num_kv_heads
-        cells = s.num_seqs * s.num_kv_heads * num_segments
+        cells = n_dec * s.num_kv_heads * num_segments
         rows = s.group
         segments = num_segments
     else:
         raise ValueError(variant)
     flops = 4.0 * total_ctx * s.num_q_heads * s.head_dim
-    steps = cells * max(s.max_context // tile, 1) / max(segments, 1)
+    steps = cells * max(max_ctx // tile, 1) / max(segments, 1)
     t = max(_mxu_time(flops, rows), _mem_time(bytes_, cells))
     t += steps * GRID_STEP_OVERHEAD_S / max(cells, 1)
     t += LAUNCH_OVERHEAD_S
     if variant == "segmented":
         # reduction kernel: second launch + segment accumulator traffic
-        seg_bytes = (s.num_seqs * s.num_kv_heads * num_segments
+        seg_bytes = (n_dec * s.num_kv_heads * num_segments
                      * s.group * (s.head_dim + 2) * 4) * 2
         t += LAUNCH_OVERHEAD_S + seg_bytes / hw.HBM_BW
     return t
@@ -123,15 +153,73 @@ def prefill_time(s: Scenario, *, block_q: int, tile: int) -> float:
     rows = block_q * s.group
     flops = bytes_ = 0.0
     cells = 0
+    max_ctx = 0
+    # only the q>1 sequences run through the prefill executable; decode
+    # (q==1) sequences are costed by decode_time for their own launch
     for ctx, q in zip(s.context_lens, s.query_lens):
+        if q <= 1:
+            continue
         nqb = -(-q // block_q)
         cells += nqb * s.num_kv_heads
+        max_ctx = max(max_ctx, ctx)
         # each q block streams pages up to its last attended position
         avg_span = ctx - q / 2
         bytes_ += nqb * avg_span * kv_row * s.num_kv_heads
         flops += 4.0 * q * avg_span * s.num_q_heads * s.head_dim
-    steps = cells * max(s.max_context // tile, 1)
+    if cells == 0:
+        return 0.0
+    steps = cells * max(max_ctx // tile, 1)
     t = max(_mxu_time(flops, rows), _mem_time(bytes_, cells))
     t += steps * GRID_STEP_OVERHEAD_S / max(cells, 1)
     # q-block padding waste: ragged tails recompute dead rows
     return t + LAUNCH_OVERHEAD_S
+
+
+def suggest_max_prefill_tokens(
+    *,
+    num_q_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    page_size: int,
+    max_seqs: int = 8,
+    target_context: int = 2048,
+    itl_slack: float = 4.0,
+    block_q: int = 16,
+    candidates: tuple[int, ...] = (16384, 8192, 4096, 2048, 1024, 512,
+                                   256, 128, 64, 32),
+) -> int:
+    """Chunk-size autotuner: pick the scheduler's per-step prefill token
+    budget from the decode-latency roofline instead of a constant.
+
+    Chunked prefill exists to keep inter-token latency flat: each step runs
+    one decode launch plus (at most) one budget-sized prefill chunk, so the
+    ITL stretch a chunk adds is prefill_time(chunk) / decode_time(batch).
+    This picks the LARGEST budget whose predicted chunk latency stays
+    within `itl_slack` decode-launch-equivalents for a `max_seqs`-wide
+    batch at `target_context` (slack > 1: a chunk may stretch a step to a
+    few decode launches — that is the bounded spike chunking trades the
+    monolithic-prefill stall for).  Bigger chunks fall out when decode is
+    expensive relative to the chunk (long contexts, deep batches, small
+    models whose launches are overhead-dominated); smaller ones when a fat
+    chunk would dominate the step."""
+    tile = page_size
+    while tile > 8 and 2 * 2 * tile * head_dim * 2 > VMEM_BUDGET:
+        tile //= 2  # stay inside the VMEM double-buffer budget
+    dec = Scenario(
+        num_seqs=max_seqs, context_lens=(target_context,) * max_seqs,
+        query_lens=(1,) * max_seqs, num_q_heads=num_q_heads,
+        num_kv_heads=num_kv_heads, head_dim=head_dim, page_size=page_size,
+    )
+    t_dec = decode_time(dec, variant="gqa", tile=tile)
+    floor = max(page_size, min(candidates))
+    for c in sorted(candidates, reverse=True):
+        chunk = Scenario(
+            num_seqs=1, context_lens=(target_context + c,),
+            query_lens=(c,), num_q_heads=num_q_heads,
+            num_kv_heads=num_kv_heads, head_dim=head_dim,
+            page_size=page_size,
+        )
+        if prefill_time(chunk, block_q=block_q, tile=tile) \
+                <= itl_slack * t_dec:
+            return max(c, floor)
+    return floor

@@ -14,12 +14,23 @@ import time
 
 import numpy as np
 
-from repro.autotune.costmodel import Scenario, decode_time, prefill_time
+from repro.autotune.costmodel import (
+    Scenario, decode_time, prefill_time, split_phases,
+)
 from repro.core.attention.heuristics import KernelConfig
 
 
-def scenario_grid(*, num_q_heads=32, num_kv_heads=8, head_dim=128,
-                  page_size=16, seed=0) -> list[Scenario]:
+# the Llama3-8B-flavored default geometry shared by scenario_grid and the
+# chunk-size roofline in tune_and_export (one source of truth)
+ARCH_DEFAULTS = {"num_q_heads": 32, "num_kv_heads": 8, "head_dim": 128,
+                 "page_size": 16}
+
+
+def scenario_grid(*, num_q_heads=ARCH_DEFAULTS["num_q_heads"],
+                  num_kv_heads=ARCH_DEFAULTS["num_kv_heads"],
+                  head_dim=ARCH_DEFAULTS["head_dim"],
+                  page_size=ARCH_DEFAULTS["page_size"],
+                  seed=0) -> list[Scenario]:
     """The paper's Llama3-8B-flavored sweep: batch sizes x max sequence
     lengths x decode shares, with per-request length jitter."""
     rng = np.random.default_rng(seed)
@@ -58,26 +69,33 @@ PREFILL_SPACE: list[KernelConfig] = [
 
 def measure(scenario: Scenario, cfg: KernelConfig, *,
             use_hardware: bool = False) -> float:
-    """Latency (s) of this config on this scenario."""
+    """Latency (s) of this config on this scenario.  A mixed batch runs as
+    two launches (one decode, one prefill executable), so the scenario is
+    split by phase (q == 1 vs q > 1) and each sub-batch is costed/timed
+    against its own launch only — costing the whole scenario in both
+    phases would double-count every sequence's context."""
+    dec, pre = split_phases(scenario)
     if use_hardware:  # pragma: no cover - TPU-only path
-        return _measure_on_device(scenario, cfg)
-    if scenario.decode_share == 1.0:
-        return decode_time(
-            scenario, variant=cfg.variant,
-            tile=cfg.tile or scenario.page_size,
-            num_segments=cfg.num_segments,
-        )
-    return prefill_time(
-        scenario, block_q=cfg.block_q, tile=cfg.tile or scenario.page_size,
-    ) + (decode_time(
-        scenario, variant=cfg.variant, tile=cfg.tile or scenario.page_size,
-        num_segments=cfg.num_segments) if scenario.decode_share > 0 else 0.0)
+        return sum(_measure_on_device(sub, cfg)
+                   for sub in (dec, pre) if sub is not None)
+    tile = cfg.tile or scenario.page_size
+    t = 0.0
+    if dec is not None:
+        t += decode_time(dec, variant=cfg.variant, tile=tile,
+                         num_segments=cfg.num_segments)
+    if pre is not None:
+        t += prefill_time(pre, block_q=cfg.block_q, tile=tile)
+    return t
 
 
 def _measure_on_device(scenario: Scenario, cfg: KernelConfig,
                        warmup: int = 20, iters: int = 100) -> float:
     """Wall-clock timing of the real kernels (paper §7.1 methodology:
-    20 warmup + mean of 100)."""
+    20 warmup + mean of 100).  Expects a single-phase scenario (see
+    `measure`): all-decode batches time the decode kernel, batches with
+    query_lens > 1 time the Q-Block prefill kernel.  K and V use
+    independent page pools — aliasing V onto K would halve the DMA
+    traffic the sweep is supposed to measure."""
     import jax
     import jax.numpy as jnp
     from repro.kernels.paged_attention import ops
@@ -85,20 +103,36 @@ def _measure_on_device(scenario: Scenario, cfg: KernelConfig,
     s = scenario
     np_ = -(-s.max_context // s.page_size)
     p = s.num_seqs * np_ + 1
-    key = jax.random.key(0)
-    q = jax.random.normal(key, (s.num_seqs, s.num_q_heads, s.head_dim),
-                          jnp.bfloat16)
-    kp = jax.random.normal(key, (s.num_kv_heads, p, s.page_size, s.head_dim),
+    kk, kv, kq = jax.random.split(jax.random.key(0), 3)
+    kp = jax.random.normal(kk, (s.num_kv_heads, p, s.page_size, s.head_dim),
                            jnp.bfloat16)
-    vp = kp
+    vp = jax.random.normal(kv, (s.num_kv_heads, p, s.page_size, s.head_dim),
+                           jnp.bfloat16)
     pt = jnp.arange(1, 1 + s.num_seqs * np_,
                     dtype=jnp.int32).reshape(s.num_seqs, np_)
     ctx = jnp.asarray(s.context_lens, jnp.int32)
+    is_prefill = any(q > 1 for q in s.query_lens)
 
-    def run():
-        return ops.paged_attention_decode(
-            q, kp, vp, pt, ctx, variant=cfg.variant, tile=cfg.tile,
-            num_segments=cfg.num_segments)
+    if is_prefill:
+        total_q = sum(s.query_lens)
+        q = jax.random.normal(kq, (total_q, s.num_q_heads, s.head_dim),
+                              jnp.bfloat16)
+        qsl = jnp.asarray(np.concatenate(
+            [[0], np.cumsum(s.query_lens)]), jnp.int32)
+        qlens = jnp.asarray(s.query_lens, jnp.int32)
+
+        def run():
+            return ops.paged_attention_prefill(
+                q, kp, vp, pt, ctx, qsl, qlens, block_q=cfg.block_q,
+                tile=cfg.tile)
+    else:
+        q = jax.random.normal(kq, (s.num_seqs, s.num_q_heads, s.head_dim),
+                              jnp.bfloat16)
+
+        def run():
+            return ops.paged_attention_decode(
+                q, kp, vp, pt, ctx, variant=cfg.variant, tile=cfg.tile,
+                num_segments=cfg.num_segments)
 
     for _ in range(warmup):
         run().block_until_ready()

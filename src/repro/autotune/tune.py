@@ -13,11 +13,14 @@ from __future__ import annotations
 import dataclasses
 import json
 
+from repro.autotune.costmodel import split_phases, suggest_max_prefill_tokens
 from repro.autotune.microbench import (
-    DECODE_SPACE, SweepResult, scenario_grid, sweep,
+    ARCH_DEFAULTS, DECODE_SPACE, PREFILL_SPACE, SweepResult, scenario_grid,
+    sweep,
 )
 
-FEATURES = ("num_seqs", "max_context", "group", "decode_share")
+FEATURES = ("num_seqs", "max_context", "group", "decode_share",
+            "avg_query_len")
 
 
 def _feat(sr: SweepResult, name: str):
@@ -128,19 +131,55 @@ def regret_report(results, space, tree: Node) -> dict:
 
 def tune_and_export(path_json: str, path_listing: str | None = None, *,
                     use_hardware: bool = False, seed: int = 0,
+                    max_seqs: int = 8, target_context: int = 2048,
                     **arch_kw) -> dict:
-    scenarios = [s for s in scenario_grid(seed=seed, **arch_kw)
-                 if s.decode_share == 1.0]
-    results = sweep(scenarios, DECODE_SPACE, use_hardware=use_hardware)
-    tree = fit_tree(results, DECODE_SPACE)
-    payload = {"decode_tree": flatten(tree, DECODE_SPACE)}
+    """Full Fig.-5 workflow: sweep the scenario grid, fit one decision tree
+    PER PHASE, and export them with the roofline chunk-size suggestion.
+
+    Each grid scenario is split into its decode (q == 1) and prefill
+    (q > 1) sub-batches — the two phases are separate launches with
+    separate tuning surfaces, so the decode tree is fit on decode
+    sub-batches over DECODE_SPACE and the prefill tree on prefill
+    sub-batches over PREFILL_SPACE.  The mixed-share grid rows thereby
+    contribute to BOTH trees instead of being filtered out."""
+    grid = scenario_grid(seed=seed, **arch_kw)
+    phases = [split_phases(s) for s in grid]
+    dec_scenarios = [d for d, _ in phases if d is not None]
+    pre_scenarios = [p for _, p in phases if p is not None]
+
+    dec_results = sweep(dec_scenarios, DECODE_SPACE,
+                        use_hardware=use_hardware)
+    pre_results = sweep(pre_scenarios, PREFILL_SPACE,
+                        use_hardware=use_hardware)
+    dec_tree = fit_tree(dec_results, DECODE_SPACE)
+    pre_tree = fit_tree(pre_results, PREFILL_SPACE)
+
+    arch = dict(ARCH_DEFAULTS)
+    arch.update({k: v for k, v in arch_kw.items() if k in arch})
+    chunk = suggest_max_prefill_tokens(
+        max_seqs=max_seqs, target_context=target_context, **arch)
+    payload = {
+        "decode_tree": flatten(dec_tree, DECODE_SPACE),
+        "prefill_tree": flatten(pre_tree, PREFILL_SPACE),
+        "suggested_max_prefill_tokens": chunk,
+    }
     with open(path_json, "w") as f:
         json.dump(payload, f, indent=1)
-    listing = to_listing(tree, DECODE_SPACE)
+    listing = to_listing(dec_tree, DECODE_SPACE)
+    pre_listing = to_listing(pre_tree, PREFILL_SPACE)
     if path_listing:
         with open(path_listing, "w") as f:
-            f.write("# auto-generated decision tree (paper Listing 2 analog)\n")
+            f.write("# auto-generated decision trees "
+                    "(paper Listing 2 analog)\n")
+            f.write("# --- decode ---\n")
             f.write(listing)
-    report = regret_report(results, DECODE_SPACE, tree)
+            f.write("# --- prefill ---\n")
+            f.write(pre_listing)
+            f.write(f"# max_prefill_tokens = {chunk}  "
+                    "(decode-latency roofline)\n")
+    report = regret_report(dec_results, DECODE_SPACE, dec_tree)
     report["listing"] = listing
+    report["prefill"] = regret_report(pre_results, PREFILL_SPACE, pre_tree)
+    report["prefill"]["listing"] = pre_listing
+    report["suggested_max_prefill_tokens"] = chunk
     return report

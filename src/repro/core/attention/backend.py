@@ -65,7 +65,8 @@ def decode_attention(
     if backend == "pallas":
         assert v_pages is not None, "pallas MLA decode uses the xla path"
         assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
-        cfg = kernel_cfg or heuristics.KernelConfig("gqa")
+        cfg = heuristics.validate(
+            kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
         return paged_ops.paged_attention_decode(
             q, k_pages[:, 0], v_pages[:, 0], page_table, context_lens,
             variant=cfg.variant, tile=cfg.tile,
@@ -202,7 +203,8 @@ def prefill_attention_uniform(
     `prefill_attention_ragged` (token-packed)."""
     b, s, hq, dk = q.shape
     if backend == "pallas":
-        cfg = kernel_cfg or heuristics.KernelConfig("gqa")
+        cfg = heuristics.validate(
+            kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
         assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
         # uniform padded layout == ragged layout with stride-s starts
         qsl = (jnp.arange(b + 1, dtype=jnp.int32) * s)
@@ -246,7 +248,8 @@ def prefill_attention_cached(
               q_offset, and cached lengths vary across the batch)."""
     b, s, hq, dk = q.shape
     if backend == "pallas":
-        cfg = kernel_cfg or heuristics.KernelConfig("gqa")
+        cfg = heuristics.validate(
+            kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
         assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
         qsl = jnp.arange(b + 1, dtype=jnp.int32) * s
         out = paged_ops.paged_attention_prefill(
@@ -328,7 +331,8 @@ def prefill_attention_ragged(
 ) -> jax.Array:
     """General ragged chunked prefill (engine path) — always the paper's
     Q-Block kernel; KV (incl. the chunk) is read from the pages."""
-    cfg = kernel_cfg or heuristics.KernelConfig("gqa")
+    cfg = heuristics.validate(
+        kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
     del backend
     assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
     return paged_ops.paged_attention_prefill(

@@ -1,19 +1,27 @@
 """Kernel-config heuristics — the paper's §5 'autotuning exported as simple
 if/else decision trees' (Listing 2), adapted to the TPU tuning surface:
-kernel variant (C1/C2/C3), KV tile size (C4), and segment count (C3).
+kernel variant (C1/C2/C3), KV tile size (C4), segment count (C3), and the
+prefill Q-block size (C2).
 
-The default tree below mirrors the paper's shipped heuristic structure; the
-autotune subsystem (repro.autotune) regenerates it from microbenchmark sweeps
-and `load()` swaps it in. Decisions happen at *dispatch* time on host-side
-batch metadata — never inside the compiled graph — which is exactly what
-keeps them compatible with the static-shape (CUDA-graph-analog) executables
-(paper §6.2).
+The default trees below mirror the paper's shipped heuristic structure; the
+autotune subsystem (repro.autotune) regenerates them from microbenchmark
+sweeps and `load()` swaps them in (one tree per phase: decode launches and
+prefill launches are separate executables with separate tuning surfaces).
+Decisions happen at *dispatch* time on host-side batch metadata — never
+inside the compiled graph — which is exactly what keeps them compatible
+with the static-shape (CUDA-graph-analog) executables (paper §6.2): the
+engine keys each compiled program by (batch-bucket, seq-bucket,
+KernelConfig), so a tree that flips variants by batch shape replays cached
+graphs instead of recompiling.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
+
+log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,7 +43,11 @@ class BatchProfile:
     avg_query_len: int = 1
 
 
-_TREE: list[tuple[dict, KernelConfig]] | None = None
+_DECODE_TREE: list[tuple[dict, KernelConfig]] | None = None
+_PREFILL_TREE: list[tuple[dict, KernelConfig]] | None = None
+_SUGGESTED_CHUNK: int | None = None
+_LOADED_PATH: str | None = None
+_ENV_CHECKED = False
 
 
 def default_decode_config(p: BatchProfile) -> KernelConfig:
@@ -65,34 +77,91 @@ def _match(cond: dict, p: BatchProfile) -> bool:
 
 
 def decode_config(p: BatchProfile) -> KernelConfig:
-    if _TREE is not None:
-        for cond, cfg in _TREE:
+    if _DECODE_TREE is not None:
+        for cond, cfg in _DECODE_TREE:
             if _match(cond, p):
                 return cfg
     return default_decode_config(p)
 
 
 def prefill_config(p: BatchProfile) -> KernelConfig:
+    if _PREFILL_TREE is not None:
+        for cond, cfg in _PREFILL_TREE:
+            if _match(cond, p):
+                return cfg
     return default_prefill_config(p)
 
 
+def validate(cfg: KernelConfig, page_size: int) -> KernelConfig:
+    """Clamp a (possibly foreign-arch) tuned config to this cache geometry:
+    the Pallas tile view requires tile | page_size. Invalid tiles fall back
+    to the ops-level default rather than crashing dispatch."""
+    if cfg.tile is not None and (cfg.tile > page_size
+                                 or page_size % cfg.tile):
+        return dataclasses.replace(cfg, tile=None)
+    return cfg
+
+
+def _parse_tree(raw_tree) -> list[tuple[dict, KernelConfig]]:
+    return [(cond, KernelConfig(**cfg)) for cond, cfg in raw_tree]
+
+
 def load(path: str) -> None:
-    """Install an autotune-exported decision tree (JSON list of
-    [condition, kernel_config] pairs, first match wins)."""
-    global _TREE
+    """Install autotune-exported decision trees (JSON: first-match-wins
+    [condition, kernel_config] lists under 'decode_tree' / 'prefill_tree',
+    plus an optional roofline-derived 'suggested_max_prefill_tokens')."""
+    global _DECODE_TREE, _PREFILL_TREE, _SUGGESTED_CHUNK, _LOADED_PATH
     with open(path) as f:
         raw = json.load(f)
-    _TREE = [
-        (cond, KernelConfig(**cfg)) for cond, cfg in raw["decode_tree"]
-    ]
+    # parse everything BEFORE assigning any global: a malformed file must
+    # not leave a half-installed tree behind
+    decode_tree = _parse_tree(raw["decode_tree"])
+    prefill_tree = (_parse_tree(raw["prefill_tree"])
+                    if raw.get("prefill_tree") else None)
+    _DECODE_TREE = decode_tree
+    _PREFILL_TREE = prefill_tree
+    _SUGGESTED_CHUNK = raw.get("suggested_max_prefill_tokens")
+    _LOADED_PATH = path
+    log.info("attention heuristics loaded from %s (%d decode leaves, "
+             "%d prefill leaves)", path, len(_DECODE_TREE),
+             len(_PREFILL_TREE or ()))
+
+
+def loaded_path() -> str | None:
+    return _LOADED_PATH
+
+
+def suggested_max_prefill_tokens() -> int | None:
+    """Chunk-size budget exported by the cost-model roofline autotuner
+    (None when no tree is loaded or the export predates the field)."""
+    return _SUGGESTED_CHUNK
 
 
 def reset() -> None:
-    global _TREE
-    _TREE = None
+    global _DECODE_TREE, _PREFILL_TREE, _SUGGESTED_CHUNK, _LOADED_PATH, \
+        _ENV_CHECKED
+    _DECODE_TREE = None
+    _PREFILL_TREE = None
+    _SUGGESTED_CHUNK = None
+    _LOADED_PATH = None
+    _ENV_CHECKED = False
 
 
-def maybe_load_env() -> None:
+def maybe_load_env() -> str | None:
+    """Install the tree named by $REPRO_ATTN_HEURISTICS (if any). Called at
+    engine init; idempotent so repeated engine constructions don't re-read
+    the file, and an EXPLICITLY loaded tree (`load()` / `--heuristics`)
+    always wins over the environment. Returns the loaded path (new or
+    previous) or None."""
+    global _ENV_CHECKED
+    if _ENV_CHECKED or _LOADED_PATH is not None:
+        return _LOADED_PATH
+    _ENV_CHECKED = True
     path = os.environ.get("REPRO_ATTN_HEURISTICS", "")
     if path and os.path.exists(path):
         load(path)
+        return path
+    if path:
+        log.warning("REPRO_ATTN_HEURISTICS=%s does not exist; "
+                    "using default heuristics", path)
+    return None

@@ -89,11 +89,15 @@ def _qkv(cfg: ModelConfig, p, x, positions):
 
 
 def attention(cfg: ModelConfig, p, x, positions, *, mode: str,
-              cache=None, meta=None, backend: str = "xla"):
+              cache=None, meta=None, backend: str = "xla",
+              kernel_cfg=None):
     """x [B, S, d]. Returns (out [B, S, d], new_cache_or_None).
 
     cache: {'k_pages': [Hkv,P,ps,Dk], 'v_pages': ...} for this layer.
     meta:  {'page_table', 'context_lens', 'query_lens'} (serve modes).
+    kernel_cfg: static heuristics.KernelConfig chosen at dispatch time
+    (None -> the backend's default); selects the paged-kernel variant /
+    tile / segments, so it must be part of the engine's executable key.
     """
     if cfg.mla.kv_lora_rank:
         return _mla_attention(cfg, p, x, positions, mode=mode, cache=cache,
@@ -128,10 +132,12 @@ def attention(cfg: ModelConfig, p, x, positions, *, mode: str,
                 # written above.
                 o = attn_backend.prefill_attention_cached(
                     backend, q, qlens, kp, vp, pt, ctx, scale=scale,
+                    kernel_cfg=kernel_cfg,
                 )
             else:
                 o = attn_backend.prefill_attention_uniform(
                     backend, q, k, v, qlens, kp, vp, pt, ctx, scale=scale,
+                    kernel_cfg=kernel_cfg,
                 )
             new_cache = {"k_pages": kp, "v_pages": vp}
         elif mode == "decode":
@@ -142,7 +148,7 @@ def attention(cfg: ModelConfig, p, x, positions, *, mode: str,
             vp = write_pages(cache["v_pages"], v, slots)
             o = attn_backend.decode_attention(
                 backend, q[:, 0], kp, vp, pt, ctx, scale=scale,
-                blockscan=cfg.decode_blockscan,
+                kernel_cfg=kernel_cfg, blockscan=cfg.decode_blockscan,
             )[:, None]
             new_cache = {"k_pages": kp, "v_pages": vp}
         else:

@@ -217,10 +217,12 @@ def make_cache(cfg: ModelConfig, *, max_seqs: int, num_pages: int,
 # ---------------------------------------------------------------------------
 
 
-def _decoder_block(cfg, p, x, positions, *, mode, cache, meta, backend):
+def _decoder_block(cfg, p, x, positions, *, mode, cache, meta, backend,
+                   kernel_cfg=None):
     h, new_cache = attention(
         cfg, p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps), positions,
         mode=mode, cache=cache, meta=meta, backend=backend,
+        kernel_cfg=kernel_cfg,
     )
     x = x + h
     h2 = L.rms_norm(p["ln2"], x, cfg.norm_eps)
@@ -259,8 +261,10 @@ def _head(cfg, params, x):
 
 
 def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
-            cache=None, meta=None, backend: str = "xla"):
-    """Returns (logits [B,S,V] fp32, new_cache, aux_loss)."""
+            cache=None, meta=None, backend: str = "xla", kernel_cfg=None):
+    """Returns (logits [B,S,V] fp32, new_cache, aux_loss).  `kernel_cfg`
+    (a heuristics.KernelConfig or None) is STATIC dispatch metadata —
+    chosen host-side per launch, baked into the traced program."""
     x = _embed_inputs(cfg, params, inputs)
     meta = meta or {}
     aux_total = jnp.zeros((), jnp.float32)
@@ -275,7 +279,8 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
             c_l = (jax.tree.map(lambda t: t[layer_off], attn_cache)
                    if attn_cache is not None else None)
             x, nc, aux = _decoder_block(cfg, lp, x, positions, mode=mode,
-                                        cache=c_l, meta=meta, backend=backend)
+                                        cache=c_l, meta=meta, backend=backend,
+                                        kernel_cfg=kernel_cfg)
             aux_total += aux
             if nc is not None:
                 new_cache.setdefault("_lead", []).append(nc)
@@ -285,7 +290,8 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
             x, aux = carry
             p_l, c_l = per_layer
             x, nc, a = _decoder_block(cfg, p_l, x, positions, mode=mode,
-                                      cache=c_l, meta=meta, backend=backend)
+                                      cache=c_l, meta=meta, backend=backend,
+                                      kernel_cfg=kernel_cfg)
             return (x, aux + a), nc
 
         if remat:
@@ -311,7 +317,7 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
     elif cfg.family == "hybrid":
         x, new_cache, aux_total = _hybrid_forward(
             cfg, params, x, positions, mode=mode, cache=cache, meta=meta,
-            backend=backend, remat=remat,
+            backend=backend, remat=remat, kernel_cfg=kernel_cfg,
         )
     elif cfg.family == "ssm":
         x, new_cache, aux_total = _xlstm_forward(
@@ -336,7 +342,7 @@ def _serve_masks(mode, meta, b, s):
 
 
 def _hybrid_forward(cfg, params, x, positions, *, mode, cache, meta, backend,
-                    remat):
+                    remat, kernel_cfg=None):
     n_mamba, n_attn, group = hybrid_layout(cfg)
     b, s, _ = x.shape
     valid, seq_lens = _serve_masks(mode, meta, b, s)
@@ -373,7 +379,7 @@ def _hybrid_forward(cfg, params, x, positions, *, mode, cache, meta, backend,
                if a_cache is not None else None)
         x, nca, a = _decoder_block(cfg, params["shared"], x, positions,
                                    mode=mode, cache=c_l, meta=meta,
-                                   backend=backend)
+                                   backend=backend, kernel_cfg=kernel_cfg)
         aux += a
         new_a.append(nca)
     if off < n_mamba:  # tail
@@ -489,13 +495,14 @@ def apply_train(cfg: ModelConfig, params, batch, *, backend="xla"):
                   "tokens": jnp.sum(mask).astype(jnp.int32)}
 
 
-def apply_prefill(cfg: ModelConfig, params, cache, batch, *, backend="xla"):
+def apply_prefill(cfg: ModelConfig, params, cache, batch, *, backend="xla",
+                  kernel_cfg=None):
     """batch: inputs [B,S](ids) or [B,S,d], positions, page_table,
     context_lens, query_lens. Returns (last_token_logits [B,V], new_cache)."""
     meta = {k: batch[k] for k in ("page_table", "context_lens", "query_lens")}
     logits, new_cache, _ = forward(
         cfg, params, batch["inputs"], batch["positions"], mode="prefill",
-        cache=cache, meta=meta, backend=backend,
+        cache=cache, meta=meta, backend=backend, kernel_cfg=kernel_cfg,
     )
     # gather the logits at each sequence's last valid position
     last = jnp.clip(batch["query_lens"] - 1, 0)
@@ -505,7 +512,7 @@ def apply_prefill(cfg: ModelConfig, params, cache, batch, *, backend="xla"):
 
 
 def apply_prefill_cached(cfg: ModelConfig, params, cache, batch, *,
-                         backend="xla"):
+                         backend="xla", kernel_cfg=None):
     """Resumable prefill at context > 0: only this step's chunk of each
     prompt is embedded/computed (batch['inputs'] [B,S] holds chunk ids,
     positions are absolute, context_lens = prior context + chunk,
@@ -522,19 +529,21 @@ def apply_prefill_cached(cfg: ModelConfig, params, cache, batch, *,
     logits, new_cache, _ = forward(
         cfg, params, batch["inputs"], batch["positions"],
         mode="prefill_cached", cache=cache, meta=meta, backend=backend,
+        kernel_cfg=kernel_cfg,
     )
     last = jnp.clip(batch["query_lens"] - 1, 0)
     out = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
     return out, new_cache
 
 
-def apply_decode(cfg: ModelConfig, params, cache, batch, *, backend="xla"):
+def apply_decode(cfg: ModelConfig, params, cache, batch, *, backend="xla",
+                 kernel_cfg=None):
     """batch: inputs [B,1] ids, positions [B,1], page_table, context_lens.
     Returns (logits [B,V], new_cache)."""
     meta = {k: batch[k] for k in ("page_table", "context_lens")}
     logits, new_cache, _ = forward(
         cfg, params, batch["inputs"], batch["positions"], mode="decode",
-        cache=cache, meta=meta, backend=backend,
+        cache=cache, meta=meta, backend=backend, kernel_cfg=kernel_cfg,
     )
     return logits[:, 0], new_cache
 

@@ -29,10 +29,25 @@ resumable-prefill code path.  Chunking only changes WHEN prompt tokens are
 computed, never WHAT is computed: outputs are token-for-token identical to
 the unchunked engine (tests/test_chunked_prefill.py proves it
 differentially).
+
+Kernel-config dispatch (paper §5/§6.2, Fig. 5): every step builds a
+host-side `BatchProfile` from the scheduled batch's metadata and asks the
+heuristics trees (`decode_config` / `prefill_config` — autotune-exported
+via `heuristics.load()` / $REPRO_ATTN_HEURISTICS, or the paper-shaped
+defaults) for a `KernelConfig`.  The chosen config is STATIC: executables
+are keyed by (kind, batch-bucket, seq-bucket, KernelConfig), so a tree
+that flips variants by batch shape (e.g. `segmented` for small-batch
+long-context decode) replays the already-captured graph for that config
+instead of thrashing `compile_events`.  Profile context/query lengths are
+bucketed to powers of two before tree lookup so the set of distinct
+configs — and hence captures — stays bounded.  Per-step choices surface in
+`step()` stats (`dispatch`) and cumulatively in `Engine.dispatch_counts`.
 """
 from __future__ import annotations
 
+import collections
 import functools
+import logging
 from typing import Sequence
 
 import jax
@@ -40,12 +55,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.attention import heuristics
 from repro.core.paged.allocator import RefCountedPageAllocator
 from repro.models import model as M
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler
 from repro.utils.misc import cdiv, next_power_of_2
+
+log = logging.getLogger(__name__)
 
 _SSM_CACHE_KEYS = ("mamba", "mlstm", "slstm")  # slot-indexed (axis 1) caches
 
@@ -59,7 +77,7 @@ class Engine:
         max_seqs: int = 8,
         num_pages: int = 128,
         max_model_len: int = 2048,
-        max_prefill_tokens: int = 8192,
+        max_prefill_tokens: int | str = 8192,
         backend: str = "xla",
         enable_prefix_caching: bool = False,
         enable_chunked_prefill: bool = False,
@@ -71,6 +89,41 @@ class Engine:
         self.max_seqs = max_seqs
         self.num_pages = num_pages
         self.pages_per_seq = cdiv(max_model_len, cfg.page_size)
+        # $REPRO_ATTN_HEURISTICS installs an autotune-exported tree before
+        # the first dispatch (idempotent across engine constructions)
+        env_tree = heuristics.maybe_load_env()
+        if env_tree:
+            log.info("engine: attention heuristics from %s", env_tree)
+        # kernel-config dispatch only pays off where the trees actually
+        # steer a paged-attention kernel: GQA-style attention families
+        # (MLA decodes through a fixed absorbed-form path; SSM families
+        # have no attention cache at all)
+        self._dispatch_enabled = (
+            M.attn_layer_count(cfg) > 0 and not cfg.mla.kv_lora_rank)
+        self._group = max(1, cfg.num_q_heads // max(cfg.num_kv_heads, 1))
+        self.dispatch_counts: collections.Counter = collections.Counter()
+        self._last_dispatch: dict[str, dict] = {}
+        if max_prefill_tokens == "auto":
+            # chunk-size autotuner: per-step budget from the cost-model
+            # decode-latency roofline (tuned-tree export overrides)
+            from repro.autotune.costmodel import suggest_max_prefill_tokens
+            max_prefill_tokens = (
+                heuristics.suggested_max_prefill_tokens()
+                or suggest_max_prefill_tokens(
+                    num_q_heads=cfg.num_q_heads,
+                    num_kv_heads=max(cfg.num_kv_heads, 1),
+                    head_dim=cfg.resolved_head_dim,
+                    page_size=cfg.page_size, max_seqs=max_seqs,
+                    target_context=max_model_len))
+            if not enable_chunked_prefill:
+                # without chunking the budget gates MONOLITHIC admission:
+                # a prompt longer than it would wait forever.  The roofline
+                # chunk size only makes sense chunked; admit any resident
+                # prompt instead.
+                max_prefill_tokens = max(max_prefill_tokens, max_model_len)
+            log.info("engine: autotuned max_prefill_tokens=%d",
+                     max_prefill_tokens)
+        self.max_prefill_tokens = max_prefill_tokens
         self.alloc = RefCountedPageAllocator(num_pages, cfg.page_size)
         self.prefix_cache = None
         if enable_prefix_caching or enable_chunked_prefill:
@@ -89,7 +142,7 @@ class Engine:
         self.step_idx = 0
         self.prefilled_tokens = 0  # uncached tokens actually computed
         self.cached_prefill_tokens = 0  # tokens skipped via the prefix cache
-        self.compile_events: list[tuple] = []  # (kind, b, s) per capture
+        self.compile_events: list[tuple] = []  # (kind, b, s, kcfg)/capture
         self._key = jax.random.key(seed)
         self._compiled: dict[tuple, object] = {}
 
@@ -97,28 +150,84 @@ class Engine:
     # compiled executables ("graphs")
     # ------------------------------------------------------------------
 
-    def _get_fn(self, kind: str, b: int, s: int):
-        key = (kind, b, s)
+    def _get_fn(self, kind: str, b: int, s: int,
+                kcfg: heuristics.KernelConfig | None = None):
+        """Executable cache keyed by (kind, batch-bucket, seq-bucket,
+        KernelConfig): the config is static dispatch metadata (kernel
+        variant / tile / segments baked into the traced program), so a
+        heuristics tree that switches variants by batch shape replays the
+        capture for that config instead of re-tracing (`compile_events`
+        grows one entry per bucket x config, never per step).  The config
+        keys UNIFORMLY across backends — the xla decode path is
+        variant-agnostic, so a flip there re-captures an equivalent
+        program once; that bounded cost buys identical replay/stats
+        semantics on both backends."""
+        key = (kind, b, s, kcfg)
         if key not in self._compiled:
             self.compile_events.append(key)
             if kind == "prefill":
                 self._compiled[key] = jax.jit(
                     functools.partial(M.apply_prefill, self.cfg,
-                                      backend=self.backend)
+                                      backend=self.backend,
+                                      kernel_cfg=kcfg)
                 )
             elif kind.startswith("prefill_cached"):
                 self._compiled[key] = jax.jit(
                     functools.partial(M.apply_prefill_cached, self.cfg,
-                                      backend=self.backend)
+                                      backend=self.backend,
+                                      kernel_cfg=kcfg)
                 )
             elif kind == "decode":
                 self._compiled[key] = jax.jit(
                     functools.partial(M.apply_decode, self.cfg,
-                                      backend=self.backend)
+                                      backend=self.backend,
+                                      kernel_cfg=kcfg)
                 )
             else:
                 raise ValueError(kind)
         return self._compiled[key]
+
+    # ------------------------------------------------------------------
+    # kernel-config dispatch (paper Fig. 5: profile -> tree -> config)
+    # ------------------------------------------------------------------
+
+    def _decode_profile(self, reqs: list[Request]) -> heuristics.BatchProfile:
+        return heuristics.BatchProfile(
+            num_seqs=len(reqs),
+            max_context=next_power_of_2(max(r.total_len for r in reqs)),
+            group=self._group, page_size=self.cfg.page_size,
+            decode_share=1.0, avg_query_len=1,
+        )
+
+    def _prefill_profile(self, reqs: list[Request]) -> heuristics.BatchProfile:
+        max_ctx = max(r.chunk_start + r.num_scheduled_tokens for r in reqs)
+        avg_q = sum(r.num_scheduled_tokens for r in reqs) // len(reqs)
+        return heuristics.BatchProfile(
+            num_seqs=len(reqs),
+            max_context=next_power_of_2(max_ctx),
+            group=self._group, page_size=self.cfg.page_size,
+            decode_share=0.0,
+            avg_query_len=next_power_of_2(max(avg_q, 1)),
+        )
+
+    def _dispatch(self, phase: str,
+                  profile: heuristics.BatchProfile | None) \
+            -> heuristics.KernelConfig | None:
+        """Pick this launch's KernelConfig from the (loaded or default)
+        tree and record it in the per-step / cumulative dispatch stats."""
+        if not self._dispatch_enabled or profile is None:
+            return None
+        pick = (heuristics.decode_config if phase == "decode"
+                else heuristics.prefill_config)
+        kcfg = heuristics.validate(pick(profile), self.cfg.page_size)
+        self.dispatch_counts[(phase, kcfg.variant)] += 1
+        self._last_dispatch[phase] = {
+            "variant": kcfg.variant, "tile": kcfg.tile,
+            "num_segments": kcfg.num_segments, "block_q": kcfg.block_q,
+            "num_seqs": profile.num_seqs,
+            "max_context": profile.max_context,
+        }
+        return kcfg
 
     @functools.cached_property
     def _sample_fn(self):
@@ -154,6 +263,7 @@ class Engine:
     # ------------------------------------------------------------------
 
     def step(self) -> dict:
+        self._last_dispatch = {}
         dec = self.sched.step(self.step_idx)
         new_tokens = dec.scheduled_prefill_tokens
         # cached tokens are reported on a request's FIRST chunk (the one
@@ -169,7 +279,8 @@ class Engine:
                  "prefill_tokens": new_tokens,
                  "cached_tokens": cached_tokens,
                  "partial_prefills": sum(1 for r in dec.prefill_reqs
-                                         if not r.prefill_done)}
+                                         if not r.prefill_done),
+                 "budget_utilization": dec.budget_utilization}
         if self.prefix_cache is not None:
             stats.update(self.prefix_cache.stats())
         for req in dec.prefill_reqs:
@@ -192,6 +303,7 @@ class Engine:
                         r.prompt, r.pages, r.context_len, r.cache_cursor)
         if dec.decode_reqs:
             self._run_decode(dec.decode_reqs)
+        stats["dispatch"] = dict(self._last_dispatch)
 
         for req in list(self.sched.running):
             if req.prefill_done and req.done:
@@ -257,7 +369,8 @@ class Engine:
             pt[i] = self.page_table[r.slot]
 
         cache_in = self._prefill_cache_view(b)
-        fn = self._get_fn("prefill", b, s)
+        kcfg = self._dispatch("prefill", self._prefill_profile(reqs))
+        fn = self._get_fn("prefill", b, s, kcfg)
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),
@@ -298,7 +411,8 @@ class Engine:
             pt[i] = self.page_table[r.slot][:np_b]
 
         cache_in = self._prefill_cache_view(b)
-        fn = self._get_fn(f"prefill_cached/np{np_b}", b, s)
+        kcfg = self._dispatch("prefill_cached", self._prefill_profile(reqs))
+        fn = self._get_fn(f"prefill_cached/np{np_b}", b, s, kcfg)
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),
@@ -321,7 +435,8 @@ class Engine:
             pos[r.slot, 0] = r.total_len - 1
             ctx[r.slot] = r.total_len
             temps[r.slot] = r.temperature
-        fn = self._get_fn("decode", b, 1)
+        kcfg = self._dispatch("decode", self._decode_profile(reqs))
+        fn = self._get_fn("decode", b, 1, kcfg)
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),

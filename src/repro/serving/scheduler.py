@@ -51,10 +51,26 @@ class ScheduleDecision:
     prefill_reqs: list[Request]  # admissions + continued chunks, each with
     #                              (chunk_start, num_scheduled_tokens) set
     preempted: list[Request]
+    token_budget: int = 0  # the step's total budget (max_prefill_tokens)
+    decodes_charged: bool = False  # chunked mode charges decodes 1 token
 
     @property
     def scheduled_prefill_tokens(self) -> int:
         return sum(r.num_scheduled_tokens for r in self.prefill_reqs)
+
+    @property
+    def budget_utilization(self) -> float:
+        """Fraction of the per-step token budget actually scheduled —
+        the observable the chunk-size autotuner (cost-model roofline ->
+        max_prefill_tokens) is validated against: a well-sized budget
+        saturates during prefill bursts without starving decodes.  Can
+        exceed 1.0 in chunked mode: decodes are never displaced, so a
+        step holding more decodes than the budget is decode-saturated
+        (prefill contributes zero), not over-scheduled."""
+        used = self.scheduled_prefill_tokens
+        if self.decodes_charged:
+            used += len(self.decode_reqs)
+        return used / self.token_budget if self.token_budget else 0.0
 
 
 class Scheduler:
@@ -264,4 +280,6 @@ class Scheduler:
             if victim is not None:
                 preempted.append(victim)
 
-        return ScheduleDecision(decode_reqs, prefill_reqs, preempted)
+        return ScheduleDecision(decode_reqs, prefill_reqs, preempted,
+                                token_budget=self.max_prefill_tokens,
+                                decodes_charged=self.enable_chunked_prefill)

@@ -1,11 +1,17 @@
 """Autotune subsystem: cost-model sanity (paper Fig. 6 structure), tree
-fitting, export/load roundtrip into the dispatch heuristics."""
+fitting, export/load roundtrip into the dispatch heuristics, phase-split
+costing, and the chunk-size roofline."""
 import json
 import os
 import tempfile
 
-from repro.autotune.costmodel import Scenario, decode_time, prefill_time
-from repro.autotune.microbench import DECODE_SPACE, scenario_grid, sweep
+from repro.autotune.costmodel import (
+    Scenario, decode_time, prefill_time, split_phases,
+    suggest_max_prefill_tokens,
+)
+from repro.autotune.microbench import (
+    DECODE_SPACE, PREFILL_SPACE, measure, scenario_grid, sweep,
+)
 from repro.autotune.tune import fit_tree, flatten, regret_report, \
     tune_and_export
 from repro.core.attention import heuristics as H
@@ -68,6 +74,8 @@ def test_export_load_dispatch_roundtrip():
         tune_and_export(path, num_q_heads=32, num_kv_heads=8, head_dim=128)
         raw = json.load(open(path))
         assert raw["decode_tree"]
+        assert raw["prefill_tree"]  # PR-3: both phases export
+        assert raw["suggested_max_prefill_tokens"] >= 16
         H.load(path)
         try:
             cfg = H.decode_config(H.BatchProfile(
@@ -76,8 +84,177 @@ def test_export_load_dispatch_roundtrip():
             # long-context small batch should pick the parallel tiled
             # softmax (paper §4.5)
             assert cfg.variant == "segmented"
+            pcfg = H.prefill_config(H.BatchProfile(
+                num_seqs=2, max_context=8192, group=4, page_size=16,
+                decode_share=0.0, avg_query_len=1024))
+            assert pcfg in PREFILL_SPACE  # came from the fitted tree
+            assert H.suggested_max_prefill_tokens() == \
+                raw["suggested_max_prefill_tokens"]
         finally:
             H.reset()
+
+
+def _walk(node, scenario):
+    """Reference tree walk (what flatten()'s first-match list must equal)."""
+    while node.config_idx is None:
+        node = (node.le if getattr(scenario, node.feature) <= node.threshold
+                else node.gt)
+    return node.config_idx
+
+
+def test_loaded_tree_reproduces_fitted_leaves():
+    """tune -> export -> load -> dispatch round trip: for EVERY swept
+    scenario, decode_config on the corresponding BatchProfile must return
+    exactly the KernelConfig of the fitted tree's leaf (the flattened
+    first-match condition list is equivalent to walking the tree)."""
+    grid = scenario_grid(seed=2)
+    dec_scenarios = [d for s in grid if (d := split_phases(s)[0])]
+    results = sweep(dec_scenarios, DECODE_SPACE)
+    tree = fit_tree(results, DECODE_SPACE)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tree.json")
+        with open(path, "w") as f:
+            json.dump({"decode_tree": flatten(tree, DECODE_SPACE)}, f)
+        H.load(path)
+        try:
+            for sc in dec_scenarios:
+                expect = DECODE_SPACE[_walk(tree, sc)]
+                got = H.decode_config(H.BatchProfile(
+                    num_seqs=sc.num_seqs, max_context=sc.max_context,
+                    group=sc.group, page_size=sc.page_size,
+                    decode_share=sc.decode_share,
+                    avg_query_len=sc.avg_query_len))
+                assert got == expect, sc
+        finally:
+            H.reset()
+
+
+def test_match_boundary_behavior():
+    """_le includes its threshold, _ge (exported as thr+eps) excludes it —
+    a profile sitting EXACTLY on a split threshold must land in the le
+    branch, one past it in the ge branch, with no gap and no overlap."""
+    seg = {"variant": "segmented", "tile": None, "num_segments": 4,
+           "block_q": 16}
+    gqa = {"variant": "gqa", "tile": None, "num_segments": 8, "block_q": 16}
+    tree = {"decode_tree": [
+        [{"max_context_le": 1024}, seg],
+        [{"max_context_ge": 1024 + 1e-9}, gqa],
+    ]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tree.json")
+        with open(path, "w") as f:
+            json.dump(tree, f)
+        H.load(path)
+        try:
+            def cfg_at(ctx):
+                return H.decode_config(H.BatchProfile(
+                    num_seqs=1, max_context=ctx, group=4, page_size=16))
+            assert cfg_at(1024).variant == "segmented"  # on-threshold: le
+            assert cfg_at(1025).variant == "gqa"        # past it: ge
+            assert cfg_at(1).variant == "segmented"
+            assert cfg_at(10**9).variant == "gqa"
+        finally:
+            H.reset()
+
+
+def test_default_fallback_when_no_condition_matches():
+    """A tree whose conditions all miss must fall back to the default
+    heuristic, not crash or return an arbitrary leaf."""
+    tree = {"decode_tree": [
+        [{"num_seqs_le": 0}, {"variant": "baseline", "tile": None,
+                              "num_segments": 1, "block_q": 16}],
+    ]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tree.json")
+        with open(path, "w") as f:
+            json.dump(tree, f)
+        H.load(path)
+        try:
+            p = H.BatchProfile(num_seqs=64, max_context=512, group=4,
+                               page_size=16)
+            assert H.decode_config(p) == H.default_decode_config(p)
+            # no prefill tree in this export -> default prefill heuristic
+            assert H.prefill_config(p) == H.default_prefill_config(p)
+        finally:
+            H.reset()
+
+
+def test_costmodel_phase_split():
+    """Mixed batches run as two launches: each phase's cost must depend
+    only on its own sequences (the pre-fix model charged prefill
+    sequences' context to the decode launch and vice versa)."""
+    mixed = Scenario(
+        num_seqs=4, context_lens=(100, 200, 4096, 8192),
+        query_lens=(1, 1, 512, 1024), num_q_heads=32, num_kv_heads=8,
+        head_dim=128, page_size=16,
+    )
+    dec, pre = split_phases(mixed)
+    assert dec.context_lens == (100, 200) and dec.query_lens == (1, 1)
+    assert pre.context_lens == (4096, 8192) and pre.query_lens == (512, 1024)
+    # costing the mixed scenario == costing each phase's sub-batch
+    assert decode_time(mixed, variant="gqa", tile=16) == \
+        decode_time(dec, variant="gqa", tile=16)
+    assert prefill_time(mixed, block_q=16, tile=16) == \
+        prefill_time(pre, block_q=16, tile=16)
+    # decode cost must NOT grow when unrelated prefill sequences join the
+    # batch (this was the double-count)
+    bigger_prefill = Scenario(
+        num_seqs=4, context_lens=(100, 200, 32768, 32768),
+        query_lens=(1, 1, 2048, 2048), num_q_heads=32, num_kv_heads=8,
+        head_dim=128, page_size=16,
+    )
+    assert decode_time(bigger_prefill, variant="gqa", tile=16) == \
+        decode_time(dec, variant="gqa", tile=16)
+    # measure() sums exactly the two phase launches
+    cfg = DECODE_SPACE[1]  # gqa tile=8
+    assert measure(mixed, cfg) == (
+        decode_time(dec, variant=cfg.variant, tile=cfg.tile,
+                    num_segments=cfg.num_segments)
+        + prefill_time(pre, block_q=cfg.block_q, tile=cfg.tile))
+    # empty phases cost nothing
+    assert decode_time(pre, variant="gqa", tile=16) == 0.0
+    assert prefill_time(dec, block_q=16, tile=16) == 0.0
+
+
+def test_explicit_load_wins_over_env(monkeypatch):
+    """A tree installed via heuristics.load() (the --heuristics path) must
+    not be silently overridden by $REPRO_ATTN_HEURISTICS at engine init
+    (maybe_load_env)."""
+    gqa = {"variant": "gqa", "tile": None, "num_segments": 8, "block_q": 16}
+    base = {"variant": "baseline", "tile": None, "num_segments": 1,
+            "block_q": 16}
+    with tempfile.TemporaryDirectory() as d:
+        env_path = os.path.join(d, "env.json")
+        cli_path = os.path.join(d, "cli.json")
+        json.dump({"decode_tree": [[{}, base]]}, open(env_path, "w"))
+        json.dump({"decode_tree": [[{}, gqa]]}, open(cli_path, "w"))
+        monkeypatch.setenv("REPRO_ATTN_HEURISTICS", env_path)
+        H.reset()
+        try:
+            H.load(cli_path)
+            assert H.maybe_load_env() == cli_path  # env did NOT clobber
+            p = H.BatchProfile(num_seqs=1, max_context=128, group=4,
+                               page_size=16)
+            assert H.decode_config(p).variant == "gqa"
+            # without an explicit load the env tree installs
+            H.reset()
+            assert H.maybe_load_env() == env_path
+            assert H.decode_config(p).variant == "baseline"
+        finally:
+            H.reset()
+
+
+def test_chunk_size_roofline():
+    """The chunk autotuner returns a usable budget that scales with how
+    expensive decode is relative to the chunk (never below a page)."""
+    kw = dict(num_q_heads=32, num_kv_heads=8, head_dim=128, page_size=16)
+    small = suggest_max_prefill_tokens(target_context=128, **kw)
+    large = suggest_max_prefill_tokens(target_context=32768, **kw)
+    assert small >= 16 and large >= small
+    # tighter slack -> smaller (or equal) chunks
+    tight = suggest_max_prefill_tokens(target_context=32768, itl_slack=1.0,
+                                       **kw)
+    assert tight <= large
 
 
 def test_default_heuristics_match_paper_shape():

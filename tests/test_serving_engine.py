@@ -1,8 +1,13 @@
-"""Serving engine: continuous batching, paging, preemption, exactness.
+"""Serving engine: continuous batching, paging, preemption, exactness,
+and profile-driven kernel-config dispatch.
 
 Engine plumbing (build/run/compare) lives in serving_harness.py — shared
 with test_prefix_cache.py and test_chunked_prefill.py.
 """
+import json
+import os
+import tempfile
+
 import numpy as np
 import pytest
 try:
@@ -11,7 +16,9 @@ except ImportError:  # collect-and-skip fallback (requirements-dev.txt)
     from _hypothesis_fallback import given, settings, st
 
 import serving_harness as H
+from repro.core.attention import heuristics
 from repro.core.paged.allocator import OutOfPages, PageAllocator
+from repro.serving.request import Request
 
 
 @pytest.fixture(scope="module")
@@ -50,18 +57,142 @@ def test_engine_preemption_under_page_pressure(smollm):
 
 
 def test_engine_static_decode_batch_and_bucketing(smollm):
-    """The CUDA-graph-analog: decode always compiles ONE executable (static
-    max_seqs batch); prefill compiles one per (batch, seq) bucket."""
+    """The CUDA-graph-analog: executables are keyed by (kind, batch-bucket,
+    seq-bucket, KernelConfig) — decode always uses the static max_seqs
+    batch, prefill one (batch, seq) bucket per shape, and the kernel-config
+    dispatch adds AT MOST one capture per distinct config (never one per
+    step)."""
     cfg, params = smollm
     rng = np.random.default_rng(3)
     eng = H.build_engine(cfg, params)
     H.run_requests(eng, H.make_prompts(cfg, rng, (5, 9, 17, 33, 12, 7)),
                    max_new_tokens=4)
     decode_events = [e for e in eng.compile_events if e[0] == "decode"]
-    assert decode_events == [("decode", 4, 1)]
-    for kind, b, s in eng.compile_events:
+    # static decode batch: every decode capture is (max_seqs, 1); the tree
+    # may pick a handful of distinct configs, each captured exactly once
+    assert all(e[1:3] == (4, 1) for e in decode_events)
+    assert len(decode_events) == len({e[3] for e in decode_events})
+    assert len(decode_events) <= 3  # bounded by configs, not steps
+    for kind, b, s, kcfg in eng.compile_events:
         assert b & (b - 1) == 0  # power-of-two buckets
         assert s & (s - 1) == 0 or s == 1
+
+
+def _install_tree(tmpdir: str) -> str:
+    """A synthetic tuned tree with the paper's §4.5 shape: segmented for
+    small-batch long-context decode, gqa otherwise."""
+    seg = {"variant": "segmented", "tile": None, "num_segments": 4,
+           "block_q": 16}
+    gqa = {"variant": "gqa", "tile": None, "num_segments": 8, "block_q": 16}
+    path = os.path.join(tmpdir, "tree.json")
+    with open(path, "w") as f:
+        json.dump({
+            "decode_tree": [
+                [{"num_seqs_le": 1, "max_context_ge": 64}, seg],
+                [{}, gqa],
+            ],
+            "prefill_tree": [[{}, gqa]],
+        }, f)
+    return path
+
+
+def test_engine_dispatch_switches_variant_by_batch_shape(smollm):
+    """With a tuned tree installed the engine demonstrably switches kernel
+    variants by batch shape: a lone long-context request decodes through
+    `segmented`, a 4-wide short-context batch through `gqa` — and every
+    step's choice surfaces in the stats."""
+    cfg, params = smollm
+    rng = np.random.default_rng(5)
+    with tempfile.TemporaryDirectory() as d:
+        heuristics.load(_install_tree(d))
+        try:
+            # 4 short requests: num_seqs > 1 -> gqa leaf
+            wide = H.run_requests(
+                H.build_engine(cfg, params),
+                H.make_prompts(cfg, rng, (8, 11, 5, 9)), max_new_tokens=4)
+            assert wide.engine.dispatch_counts[("decode", "gqa")] > 0
+            assert wide.engine.dispatch_counts[("decode", "segmented")] == 0
+            # 1 long request: num_seqs == 1, context >= 64 -> segmented
+            deep = H.run_requests(
+                H.build_engine(cfg, params),
+                H.make_prompts(cfg, rng, (60,)), max_new_tokens=8)
+            assert deep.engine.dispatch_counts[("decode", "segmented")] > 0
+            disp = [st["dispatch"]["decode"] for st in deep.step_stats
+                    if "decode" in st["dispatch"]]
+            assert all(dd["variant"] == "segmented" and
+                       dd["num_segments"] == 4 for dd in disp)
+        finally:
+            heuristics.reset()
+
+
+def test_engine_auto_budget_never_blocks_unchunked_admission(smollm):
+    """max_prefill_tokens='auto' resolves the roofline chunk budget — but
+    without chunked prefill the budget gates MONOLITHIC admission, so it
+    must be clamped up to max_model_len or a prompt longer than the chunk
+    suggestion would wait in the queue forever."""
+    cfg, params = smollm
+    rng = np.random.default_rng(7)
+    tree = {"decode_tree": [], "prefill_tree": [],
+            "suggested_max_prefill_tokens": 32}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tree.json")
+        with open(path, "w") as f:
+            json.dump(tree, f)
+        heuristics.load(path)
+        try:
+            eng = H.build_engine(cfg, params, max_model_len=256,
+                                 max_prefill_tokens="auto")
+            assert eng.sched.max_prefill_tokens >= 256  # clamped
+            run = H.run_requests(eng, H.make_prompts(cfg, rng, (200,)),
+                                 max_new_tokens=2, max_steps=50)
+            assert len(run.outputs[0]) == 2
+            # chunked engines keep the tuned chunk budget as-is
+            eng2 = H.build_engine(cfg, params, max_model_len=256,
+                                  max_prefill_tokens="auto",
+                                  enable_chunked_prefill=True)
+            assert eng2.sched.max_prefill_tokens == 32
+        finally:
+            heuristics.reset()
+
+
+def test_engine_per_config_executable_caching(smollm):
+    """Per-(bucket x KernelConfig) executable reuse: recurring configs
+    replay the captured graph — re-serving an identical workload adds ZERO
+    captures, every capture key is unique, and a variant flip mid-serve
+    costs exactly one capture for the new config."""
+    cfg, params = smollm
+    rng = np.random.default_rng(6)
+    prompts = H.make_prompts(cfg, rng, (9, 14))
+    with tempfile.TemporaryDirectory() as d:
+        heuristics.load(_install_tree(d))
+        try:
+            eng = H.build_engine(cfg, params, max_seqs=2)
+
+            def serve():
+                # the short request drains first; the survivor decodes
+                # alone (num_seqs==1) past the context-64 bucket, so the
+                # tree flips gqa -> segmented mid-serve
+                reqs = [Request(prompt=list(prompts[0]), max_new_tokens=8),
+                        Request(prompt=list(prompts[1]), max_new_tokens=60)]
+                for r in reqs:
+                    eng.add_request(r)
+                while eng.sched.has_work:
+                    eng.step()
+
+            serve()
+            events_first = list(eng.compile_events)
+            assert len(events_first) == len(set(events_first))
+            variants = {e[3].variant for e in events_first
+                        if e[0] == "decode"}
+            assert variants == {"gqa", "segmented"}
+            assert eng.dispatch_counts[("decode", "segmented")] > 1, \
+                "variant recurred but was captured once (see next assert)"
+            # identical workload again: every (bucket, config) recurs ->
+            # no new captures
+            serve()
+            assert eng.compile_events == events_first
+        finally:
+            heuristics.reset()
 
 
 @pytest.mark.slow
