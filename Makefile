@@ -1,7 +1,7 @@
 # Tier-1 verification (ROADMAP.md): the whole suite, fail-fast.
 PY ?= python
 
-.PHONY: test test-full test-fast bench tune deps-dev
+.PHONY: test test-full test-fast bench bench-smoke tune deps-dev
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -9,18 +9,26 @@ test:
 test-full:
 	PYTHONPATH=src $(PY) -m pytest -q
 
-# Serving + scheduler subset (<60s): the chunked-prefill differential
-# suite, engine/scheduler behavior, the allocator property tests, and the
-# autotune sweep/round-trip tests — kernel sweeps and arch matrices
+# Serving + scheduler subset: the packed/padded unified-attention and
+# chunked-prefill differential suites, prefix caching + admission
+# ordering, engine/scheduler behavior, the allocator property tests, and
+# the autotune sweep/round-trip tests — kernel sweeps and arch matrices
 # (-m slow) don't gate it.
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" \
-	  tests/test_chunked_prefill.py tests/test_serving_engine.py \
+	  tests/test_unified_attention.py tests/test_chunked_prefill.py \
+	  tests/test_serving_engine.py tests/test_prefix_cache.py \
 	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py \
 	  tests/test_autotune.py
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/run.py
+
+# CPU-side smoke (<120s): the padding-waste scenario — packed vs padded
+# launched-token-slot and compile_events counts on a mixed trace; fails
+# if packing stops paying.
+bench-smoke:
+	PYTHONPATH=src $(PY) benchmarks/e2e_latency.py --scenario padding-waste
 
 # Offline autotune (paper Fig. 5): cost-model sweep -> decision trees +
 # chunk budget in tuned/attn.{json,py} — seconds on a CPU host.  Serve

@@ -23,6 +23,9 @@ def run(emit):
     emit("fig8/prefill_tuned_vs_untuned_speedup",
          rep["prefill"]["tuned_vs_untuned_speedup"],
          "prefill tree over the prefill sub-batch grid")
+    emit("fig8/unified_tuned_vs_untuned_speedup",
+         rep["unified"]["tuned_vs_untuned_speedup"],
+         "unified tree over the UNSPLIT mixed-batch grid (packed launch)")
     emit("fig8/suggested_max_prefill_tokens",
          rep["suggested_max_prefill_tokens"],
          "chunk budget from the decode-latency roofline")

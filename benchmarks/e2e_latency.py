@@ -18,11 +18,74 @@ from repro.serving.engine import Engine
 from repro.serving.request import make_requests
 
 
+def run_padding_waste(emit, cfg=None, params=None):
+    """`padding-waste` scenario: the same mixed prefill+decode trace
+    (staggered arrivals, chunked long prompts, steady decodes) through the
+    packed (unified token stream) and padded (per-kind [B, S] buckets)
+    engines.  Reports launched token slots (the FLOPs proxy: every slot
+    runs the full per-token model FLOPs, padding included), the padding
+    waste each path carries over the scheduled work, and the
+    `compile_events` counts — the two quantities the unified launch
+    exists to shrink."""
+    if cfg is None:
+        cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
+        params = M.init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(11)
+    first = [list(rng.integers(1, cfg.vocab_size, size=n))
+             for n in (40, 9, 33)]
+    late = [list(rng.integers(1, cfg.vocab_size, size=n))
+            for n in (25, 6, 30)]
+    results = {}
+    for packed in (False, True):
+        eng = Engine(cfg, params, max_seqs=4, num_pages=256,
+                     max_model_len=256, packed_attention=packed,
+                     enable_chunked_prefill=True, max_prefill_tokens=48)
+        reqs = make_requests([list(p) for p in first], max_new_tokens=12)
+        for r in reqs:
+            eng.add_request(r)
+        for _ in range(6):
+            eng.step()  # long prompts chunk while shorts decode
+        late_reqs = make_requests([list(p) for p in late],
+                                  max_new_tokens=12)
+        for r in late_reqs:  # land mid-decode: mixed steps
+            eng.add_request(r)
+        t0 = time.perf_counter()
+        while eng.sched.has_work:
+            eng.step()
+        useful = (eng.prefilled_tokens
+                  + sum(len(r.output) for r in reqs + late_reqs))
+        results[packed] = {
+            "slots": eng.launched_token_slots,
+            "useful": useful,
+            "compiles": len(eng.compile_events),
+            "wall": time.perf_counter() - t0,
+        }
+    for packed, tag in ((False, "padded"), (True, "packed")):
+        r = results[packed]
+        emit(f"padding_waste/token_slots/{tag}", r["slots"],
+             f"token rows launched ({r['useful']} useful); "
+             f"FLOPs proxy: slots x per-token model FLOPs")
+        emit(f"padding_waste/waste_pct/{tag}",
+             100.0 * (r["slots"] - r["useful"]) / r["slots"],
+             "launched slots that were padding")
+        emit(f"padding_waste/compile_events/{tag}", r["compiles"],
+             "distinct captured executables over the trace")
+    emit("padding_waste/slot_reduction",
+         results[False]["slots"] / results[True]["slots"],
+         "padded / packed launched token rows (>1: packing saves FLOPs)")
+    emit("padding_waste/compile_reduction",
+         results[False]["compiles"] / results[True]["compiles"],
+         "padded / packed captured executables")
+    return results
+
+
 def run(emit):
     cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
     params = M.init(cfg, jax.random.key(0))
     rng = np.random.default_rng(0)
     prompt = list(rng.integers(1, cfg.vocab_size, size=50))
+
+    run_padding_waste(emit, cfg, params)
 
     for out_tokens in (8, 32, 128):
         eng = Engine(cfg, params, max_seqs=4, num_pages=128,
@@ -193,3 +256,26 @@ def tune_and_export_arch(cfg, path_json: str) -> dict:
         num_kv_heads=max(cfg.num_kv_heads, 1),
         head_dim=cfg.resolved_head_dim, page_size=cfg.page_size,
     )
+
+
+if __name__ == "__main__":
+    # standalone smoke entry (`make bench-smoke`): just the CPU-cheap
+    # padding-waste scenario, CSV to stdout in well under two minutes
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="padding-waste",
+                    choices=["padding-waste", "all"])
+    args = ap.parse_args()
+    print("name,value,derived")
+
+    def _emit(name, value, derived=""):
+        print(f"{name},{value:.4f},{derived}")
+
+    if args.scenario == "padding-waste":
+        res = run_padding_waste(_emit)
+        assert res[True]["slots"] < res[False]["slots"], \
+            "packed step launched MORE token rows than padded"
+        assert res[True]["compiles"] <= res[False]["compiles"], \
+            "packed step compiled MORE executables than padded"
+    else:
+        run(_emit)

@@ -68,12 +68,17 @@ def main():
           f"{len(raw['prefill_tree'])} prefill leaves) and {path_py}")
     print(f"\ndecode tree (Listing 2 analog):\n{rep['listing']}")
     print(f"prefill tree:\n{rep['prefill']['listing']}")
+    print(f"unified tree (token-packed step):\n"
+          f"{rep['unified']['listing']}")
     print(f"decode: tuned-vs-best-fixed speedup "
           f"{rep['tuned_vs_untuned_speedup']:.3f}x, "
           f"max pointwise {rep['max_pointwise_speedup']:.2f}x, "
           f"oracle overhead {rep['tuned_vs_oracle_overhead']:.1%}")
     print(f"prefill: tuned-vs-best-fixed speedup "
           f"{rep['prefill']['tuned_vs_untuned_speedup']:.3f}x")
+    print(f"unified: tuned-vs-best-fixed speedup "
+          f"{rep['unified']['tuned_vs_untuned_speedup']:.3f}x "
+          f"(one packed launch per mixed-batch grid row)")
     print(f"chunked-prefill budget (decode-latency roofline): "
           f"max_prefill_tokens={rep['suggested_max_prefill_tokens']}")
     print(f"\nserve with it:\n"

@@ -38,6 +38,10 @@ def main():
                     metavar="N", help="per-step token budget (default: "
                     "the tuned tree's roofline suggestion or 32 when "
                     "--chunked-prefill, else 8192)")
+    ap.add_argument("--padded", action="store_true",
+                    help="use the padded per-kind step (decode / prefill "
+                         "/ cached-prefill executables) instead of the "
+                         "default unified token-packed launch")
     ap.add_argument("--heuristics", default=None, metavar="TREE.json",
                     help="autotune-exported decision trees (from "
                          "examples/autotune_attn.py); default: run a "
@@ -77,6 +81,7 @@ def main():
         budget = 8192
     eng = Engine(cfg, params, max_seqs=4, num_pages=96, max_model_len=256,
                  backend=args.backend,
+                 packed_attention=not args.padded,
                  enable_prefix_caching=args.prefix_caching,
                  enable_chunked_prefill=args.chunked_prefill,
                  max_prefill_tokens=budget)
@@ -105,9 +110,11 @@ def main():
     total = sum(len(r.output) for r in reqs)
     print(f"\n{args.requests} requests, {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s on this host)")
+    kind = ("padded per-kind buckets" if args.padded
+            else "unified token-packed buckets")
     print(f"graph captures: {len(eng.compile_events)} "
-          f"(static decode batch + pow2 prefill buckets, one per "
-          f"bucket x kernel-config)")
+          f"({kind}, one per bucket x kernel-config); "
+          f"{eng.launched_token_slots} token rows launched")
     counts = ", ".join(f"{ph}/{var}={n}" for (ph, var), n
                        in sorted(eng.dispatch_counts.items()))
     print(f"kernel dispatch: {counts}")

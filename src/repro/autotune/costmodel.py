@@ -64,6 +64,11 @@ class Scenario:
     def avg_query_len(self) -> float:
         return sum(self.query_lens) / max(len(self.query_lens), 1)
 
+    @property
+    def total_tokens(self) -> int:
+        """Packed token-stream length: what the unified launch buckets on."""
+        return sum(self.query_lens)
+
 
 def split_phases(s: Scenario) -> tuple[Scenario | None, Scenario | None]:
     """(decode_sub, prefill_sub): the q==1 sequences and the q>1 sequences
@@ -173,6 +178,27 @@ def prefill_time(s: Scenario, *, block_q: int, tile: int) -> float:
     t += steps * GRID_STEP_OVERHEAD_S / max(cells, 1)
     # q-block padding waste: ragged tails recompute dead rows
     return t + LAUNCH_OVERHEAD_S
+
+
+def unified_time(s: Scenario, *, variant: str, tile: int,
+                 num_segments: int = 8, block_q: int = 16) -> float:
+    """Predicted latency of ONE token-packed unified launch over a mixed
+    batch: the q == 1 rows stream through the decode grid (variant C1-C3)
+    and the q > 1 chunks through the Q-Block prefill grid, sharing a
+    single executable dispatch.  Cost = decode-region + chunk-region work
+    minus the per-phase launch overheads the packing saves (the padded
+    engine pays one dispatch per kind; packed pays exactly one)."""
+    dec, pre = split_phases(s)
+    t = 0.0
+    launches = 0
+    if dec is not None:
+        t += decode_time(dec, variant=variant, tile=tile,
+                         num_segments=num_segments)
+        launches += 1
+    if pre is not None:
+        t += prefill_time(pre, block_q=block_q, tile=tile)
+        launches += 1
+    return t - max(launches - 1, 0) * LAUNCH_OVERHEAD_S
 
 
 def suggest_max_prefill_tokens(

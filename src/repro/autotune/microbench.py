@@ -15,7 +15,7 @@ import time
 import numpy as np
 
 from repro.autotune.costmodel import (
-    Scenario, decode_time, prefill_time, split_phases,
+    Scenario, decode_time, prefill_time, split_phases, unified_time,
 )
 from repro.core.attention.heuristics import KernelConfig
 
@@ -66,19 +66,41 @@ PREFILL_SPACE: list[KernelConfig] = [
     for t in (8, 16) for bq in (8, 16, 32, 64)
 ]
 
+# the unified launch tunes both regions at once: the decode-region variant
+# (C1-C3) x the chunk-region Q-block size, over a shared tile
+UNIFIED_SPACE: list[KernelConfig] = [
+    *[KernelConfig("gqa", tile=t, block_q=bq)
+      for t in (8, 16) for bq in (8, 16, 32)],
+    *[KernelConfig("segmented", tile=16, num_segments=s, block_q=bq)
+      for s in (4, 8) for bq in (16, 32)],
+]
+
 
 def measure(scenario: Scenario, cfg: KernelConfig, *,
-            use_hardware: bool = False) -> float:
-    """Latency (s) of this config on this scenario.  A mixed batch runs as
-    two launches (one decode, one prefill executable), so the scenario is
-    split by phase (q == 1 vs q > 1) and each sub-batch is costed/timed
-    against its own launch only — costing the whole scenario in both
-    phases would double-count every sequence's context."""
-    dec, pre = split_phases(scenario)
+            use_hardware: bool = False, unified: bool = False) -> float:
+    """Latency (s) of this config on this scenario.
+
+    Padded engine (`unified=False`): a mixed batch runs as two launches
+    (one decode, one prefill executable), so the scenario is split by
+    phase (q == 1 vs q > 1) and each sub-batch is costed/timed against its
+    own launch only — costing the whole scenario in both phases would
+    double-count every sequence's context.
+
+    Packed engine (`unified=True`): the mixed batch IS the launch — the
+    whole scenario is costed as one token-packed dispatch
+    (costmodel.unified_time), which is what the unified tree is fit on."""
     if use_hardware:  # pragma: no cover - TPU-only path
+        if unified:
+            return _measure_unified_on_device(scenario, cfg)
+        dec, pre = split_phases(scenario)
         return sum(_measure_on_device(sub, cfg)
                    for sub in (dec, pre) if sub is not None)
     tile = cfg.tile or scenario.page_size
+    if unified:
+        return unified_time(scenario, variant=cfg.variant, tile=tile,
+                            num_segments=cfg.num_segments,
+                            block_q=cfg.block_q)
+    dec, pre = split_phases(scenario)
     t = 0.0
     if dec is not None:
         t += decode_time(dec, variant=cfg.variant, tile=tile,
@@ -142,6 +164,55 @@ def _measure_on_device(scenario: Scenario, cfg: KernelConfig,
     return (time.perf_counter() - t0) / iters
 
 
+def _measure_unified_on_device(scenario: Scenario, cfg: KernelConfig,
+                               warmup: int = 20, iters: int = 100) -> float:
+    """Wall-clock timing of the REAL packed launch
+    (`ops.paged_attention_unified`) on a mixed scenario — the engine's
+    packed layout: q == 1 sequences first (the static decode region),
+    chunks behind them.  This is what the unified tree must be fit to on
+    hardware; summing separate per-phase kernel timings would miss the
+    packed launch's own behavior."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import ops
+
+    pairs = sorted(zip(scenario.context_lens, scenario.query_lens),
+                   key=lambda cq: cq[1] > 1)  # decode rows first
+    s = dataclasses.replace(
+        scenario, context_lens=tuple(c for c, _ in pairs),
+        query_lens=tuple(q for _, q in pairs))
+    nd = sum(1 for q in s.query_lens if q == 1)
+    np_ = -(-s.max_context // s.page_size)
+    p = s.num_seqs * np_ + 1
+    kk, kv, kq = jax.random.split(jax.random.key(0), 3)
+    kp = jax.random.normal(kk, (s.num_kv_heads, p, s.page_size, s.head_dim),
+                           jnp.bfloat16)
+    vp = jax.random.normal(kv, (s.num_kv_heads, p, s.page_size, s.head_dim),
+                           jnp.bfloat16)
+    pt = jnp.arange(1, 1 + s.num_seqs * np_,
+                    dtype=jnp.int32).reshape(s.num_seqs, np_)
+    ctx = jnp.asarray(s.context_lens, jnp.int32)
+    total_q = sum(s.query_lens)
+    q = jax.random.normal(kq, (total_q, s.num_q_heads, s.head_dim),
+                          jnp.bfloat16)
+    qsl = jnp.asarray(np.concatenate(
+        [[0], np.cumsum(s.query_lens)]), jnp.int32)
+    qlens = jnp.asarray(s.query_lens, jnp.int32)
+
+    def run():
+        return ops.paged_attention_unified(
+            q, kp, vp, pt, ctx, qsl, qlens, num_decode_seqs=nd,
+            variant=cfg.variant, tile=cfg.tile,
+            num_segments=cfg.num_segments, block_q=cfg.block_q)
+
+    for _ in range(warmup):
+        run().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        run().block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
 @dataclasses.dataclass
 class SweepResult:
     scenario: Scenario
@@ -152,11 +223,12 @@ class SweepResult:
         return space[idx]
 
 
-def sweep(scenarios, space, *, use_hardware=False) -> list[SweepResult]:
+def sweep(scenarios, space, *, use_hardware=False,
+          unified=False) -> list[SweepResult]:
     out = []
     for sc in scenarios:
         timings = {
-            i: measure(sc, cfg, use_hardware=use_hardware)
+            i: measure(sc, cfg, use_hardware=use_hardware, unified=unified)
             for i, cfg in enumerate(space)
         }
         out.append(SweepResult(sc, timings))

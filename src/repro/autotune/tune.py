@@ -15,12 +15,12 @@ import json
 
 from repro.autotune.costmodel import split_phases, suggest_max_prefill_tokens
 from repro.autotune.microbench import (
-    ARCH_DEFAULTS, DECODE_SPACE, PREFILL_SPACE, SweepResult, scenario_grid,
-    sweep,
+    ARCH_DEFAULTS, DECODE_SPACE, PREFILL_SPACE, UNIFIED_SPACE, SweepResult,
+    scenario_grid, sweep,
 )
 
 FEATURES = ("num_seqs", "max_context", "group", "decode_share",
-            "avg_query_len")
+            "avg_query_len", "total_tokens")
 
 
 def _feat(sr: SweepResult, name: str):
@@ -137,11 +137,18 @@ def tune_and_export(path_json: str, path_listing: str | None = None, *,
     PER PHASE, and export them with the roofline chunk-size suggestion.
 
     Each grid scenario is split into its decode (q == 1) and prefill
-    (q > 1) sub-batches — the two phases are separate launches with
-    separate tuning surfaces, so the decode tree is fit on decode
-    sub-batches over DECODE_SPACE and the prefill tree on prefill
+    (q > 1) sub-batches — in the PADDED engine the two phases are separate
+    launches with separate tuning surfaces, so the decode tree is fit on
+    decode sub-batches over DECODE_SPACE and the prefill tree on prefill
     sub-batches over PREFILL_SPACE.  The mixed-share grid rows thereby
-    contribute to BOTH trees instead of being filtered out."""
+    contribute to BOTH trees instead of being filtered out.
+
+    The PACKED engine's single launch is tuned separately: the unified
+    tree is fit on the UNSPLIT mixed-batch grid rows over UNIFIED_SPACE
+    (decode variant x chunk Q-block per config), with the packed-mix
+    features (`total_tokens`, `decode_share`) available as split
+    dimensions — the packed launch profile is a first-class point in the
+    tuning space, not a sum of per-phase optima."""
     grid = scenario_grid(seed=seed, **arch_kw)
     phases = [split_phases(s) for s in grid]
     dec_scenarios = [d for d, _ in phases if d is not None]
@@ -151,8 +158,11 @@ def tune_and_export(path_json: str, path_listing: str | None = None, *,
                         use_hardware=use_hardware)
     pre_results = sweep(pre_scenarios, PREFILL_SPACE,
                         use_hardware=use_hardware)
+    uni_results = sweep(grid, UNIFIED_SPACE, use_hardware=use_hardware,
+                        unified=True)
     dec_tree = fit_tree(dec_results, DECODE_SPACE)
     pre_tree = fit_tree(pre_results, PREFILL_SPACE)
+    uni_tree = fit_tree(uni_results, UNIFIED_SPACE)
 
     arch = dict(ARCH_DEFAULTS)
     arch.update({k: v for k, v in arch_kw.items() if k in arch})
@@ -161,12 +171,14 @@ def tune_and_export(path_json: str, path_listing: str | None = None, *,
     payload = {
         "decode_tree": flatten(dec_tree, DECODE_SPACE),
         "prefill_tree": flatten(pre_tree, PREFILL_SPACE),
+        "unified_tree": flatten(uni_tree, UNIFIED_SPACE),
         "suggested_max_prefill_tokens": chunk,
     }
     with open(path_json, "w") as f:
         json.dump(payload, f, indent=1)
     listing = to_listing(dec_tree, DECODE_SPACE)
     pre_listing = to_listing(pre_tree, PREFILL_SPACE)
+    uni_listing = to_listing(uni_tree, UNIFIED_SPACE)
     if path_listing:
         with open(path_listing, "w") as f:
             f.write("# auto-generated decision trees "
@@ -175,11 +187,15 @@ def tune_and_export(path_json: str, path_listing: str | None = None, *,
             f.write(listing)
             f.write("# --- prefill ---\n")
             f.write(pre_listing)
+            f.write("# --- unified (token-packed step) ---\n")
+            f.write(uni_listing)
             f.write(f"# max_prefill_tokens = {chunk}  "
                     "(decode-latency roofline)\n")
     report = regret_report(dec_results, DECODE_SPACE, dec_tree)
     report["listing"] = listing
     report["prefill"] = regret_report(pre_results, PREFILL_SPACE, pre_tree)
     report["prefill"]["listing"] = pre_listing
+    report["unified"] = regret_report(uni_results, UNIFIED_SPACE, uni_tree)
+    report["unified"]["listing"] = uni_listing
     report["suggested_max_prefill_tokens"] = chunk
     return report

@@ -316,6 +316,88 @@ def _chunked_flash_xla(
     return _osm_finalize(acc, ll).reshape(b, sq, hq, dv).astype(q.dtype)
 
 
+# xla ragged path: rows processed per chunk of this many tokens (memory
+# bound, not a math knob -- any value gives identical results)
+_RAGGED_XLA_ROW_CHUNK = 64
+
+_SINGLE_POOL_MSG = (
+    "token-packed ragged attention runs per-pool (shard-local): the packed "
+    "token stream has no pool axis, so a multi-pool cache (num_pools=%d) "
+    "must be shard_map'ed so each pool sees only its local sequences"
+)
+
+
+def _ragged_attention_xla(
+    q: jax.Array,  # [T, Hq, Dk] token-packed
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [S, Np]
+    context_lens: jax.Array,  # [S]
+    query_start_loc: jax.Array,  # [S+1]
+    query_lens: jax.Array,  # [S]
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """xla ragged reference: every packed token is its own 1-row flash
+    batch.  Token i of sequence s sits at absolute position
+    context_lens[s] - query_lens[s] + (i - query_start_loc[s]) and attends
+    that sequence's paged KV up to (and including) itself — the same
+    `_osm_update` scan the uniform cached-prefill path runs, so a decode
+    row (q == 1) is just a 1-token segment.  The per-token page gather
+    densifies each row's KV, so the token axis is processed in
+    row-chunks to bound the working set at [chunk, Np*ps] — still the
+    CPU reference/test backend (per-token gather beats nothing on
+    hardware); the pallas path is the performance path."""
+    t = q.shape[0]
+    s = query_lens.shape[0]
+    assert k_pages.shape[1] == 1, _SINGLE_POOL_MSG % k_pages.shape[1]
+    tok = jnp.arange(t, dtype=jnp.int32)
+    # owning sequence per token (vectorized binary search, paper §6.1);
+    # out-of-range (padded) tokens clamp to the last row and mask dead
+    # below via kv_len == 0 or the causal bound
+    token_seq = jnp.searchsorted(
+        query_start_loc[1:], tok, side="right").astype(jnp.int32)
+    token_seq = jnp.minimum(token_seq, s - 1)
+    q_pos = (context_lens[token_seq] - query_lens[token_seq]
+             + (tok - query_start_loc[token_seq]))
+    kv_len = context_lens[token_seq]
+    # padded tail tokens (past the last live row) would alias the last
+    # sequence at positions >= its context: clamp their kv window shut
+    live = tok < query_start_loc[s]
+    kv_len = jnp.where(live, kv_len, 0)
+
+    # rows are independent 1-token flash batches, so chunking the token
+    # axis is EXACT — it only bounds the dense-KV working set (a long
+    # packed prompt would otherwise gather its full context once per
+    # token, all at once: [T, Np*ps] blows up host memory where the
+    # padded path peaked at [B, Np*ps])
+    chunk = min(t, _RAGGED_XLA_ROW_CHUNK)
+    pad = -t % chunk
+    if pad:
+        token_seq = jnp.pad(token_seq, (0, pad))  # seq 0's pages, kv 0
+        q_pos = jnp.pad(q_pos, (0, pad))
+        kv_len = jnp.pad(kv_len, (0, pad))
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+    nc = (t + pad) // chunk
+
+    def one_chunk(args):
+        qc, seq_c, qpos_c, kvlen_c = args
+        pt_tok = page_table[seq_c]  # [chunk, Np]
+        k = gather_pages(k_pages, pt_tok)  # [chunk, Np*ps, Hkv, Dk]
+        v = gather_pages(v_pages, pt_tok)
+        return _chunked_flash_xla(
+            qc[:, None], k, v, qpos_c, kvlen_c, scale=scale,
+        )[:, 0]
+
+    out = jax.lax.map(one_chunk, (
+        q.reshape(nc, chunk, *q.shape[1:]),
+        token_seq.reshape(nc, chunk),
+        q_pos.reshape(nc, chunk),
+        kv_len.reshape(nc, chunk),
+    ))
+    return out.reshape(nc * chunk, *out.shape[2:])[:t]
+
+
 def prefill_attention_ragged(
     backend: str,
     q: jax.Array,  # [T, Hq, Dk] token-packed
@@ -329,14 +411,69 @@ def prefill_attention_ragged(
     scale: float | None = None,
     kernel_cfg: heuristics.KernelConfig | None = None,
 ) -> jax.Array:
-    """General ragged chunked prefill (engine path) — always the paper's
-    Q-Block kernel; KV (incl. the chunk) is read from the pages."""
+    """General ragged chunked prefill (token-packed layout):
+      pallas  the paper's Q-Block kernel; KV (incl. the chunk) is read
+              from the pages
+      xla     per-token gather + online-softmax reference scan
+    Decode-mixed packed batches go through `unified_attention`, which
+    routes q == 1 rows around the Q-Block machinery."""
+    if backend == "xla":
+        return _ragged_attention_xla(
+            q, k_pages, v_pages, page_table, context_lens,
+            query_start_loc, query_lens, scale=scale,
+        )
     cfg = heuristics.validate(
         kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
-    del backend
-    assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
+    assert k_pages.shape[1] == 1, _SINGLE_POOL_MSG % k_pages.shape[1]
     return paged_ops.paged_attention_prefill(
         q, k_pages[:, 0], v_pages[:, 0], page_table, context_lens,
         query_start_loc, query_lens, block_q=cfg.block_q, tile=cfg.tile,
         scale=scale,
+    )
+
+
+def unified_attention(
+    backend: str,
+    q: jax.Array,  # [T, Hq, Dk] token-packed, decode rows first
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [S, Np]
+    context_lens: jax.Array,  # [S]
+    query_start_loc: jax.Array,  # [S+1]
+    query_lens: jax.Array,  # [S]
+    *,
+    num_decode_seqs: int = 0,
+    scale: float | None = None,
+    kernel_cfg: heuristics.KernelConfig | None = None,
+) -> jax.Array:
+    """The unified engine-step attention: ONE launch over a token-packed
+    batch mixing decode rows (q = 1), fresh prefill chunks (context ==
+    query), and resumed/cached chunks (context > query).
+
+    Layout contract (built host-side by the engine): sequences
+    [0, num_decode_seqs) are the STATIC decode region — one token row
+    each, `query_start_loc[i] == i`, dead slots masked by
+    `context_lens == 0` — and the remaining sequences are ragged chunks
+    packed behind them.  `num_decode_seqs` is static dispatch metadata
+    (like `kernel_cfg`), baked into the traced program.
+
+      pallas  q = 1 rows run the C1-C3 decode kernels (no Q-Block causal
+              inner loop), chunk rows the §6.1 Q-Block prefill kernel —
+              bit-identical to the per-kind launches this replaces
+      xla     the ragged reference scan (a decode row is a 1-token
+              segment; same `_osm_update` math as the cached path)
+    """
+    if backend == "xla":
+        return _ragged_attention_xla(
+            q, k_pages, v_pages, page_table, context_lens,
+            query_start_loc, query_lens, scale=scale,
+        )
+    cfg = heuristics.validate(
+        kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
+    assert k_pages.shape[1] == 1, _SINGLE_POOL_MSG % k_pages.shape[1]
+    return paged_ops.paged_attention_unified(
+        q, k_pages[:, 0], v_pages[:, 0], page_table, context_lens,
+        query_start_loc, query_lens, num_decode_seqs=num_decode_seqs,
+        variant=cfg.variant, tile=cfg.tile, num_segments=cfg.num_segments,
+        block_q=cfg.block_q, scale=scale,
     )

@@ -34,17 +34,22 @@ class KernelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class BatchProfile:
-    """Host-side batch metadata the tree branches on (paper §6.1)."""
+    """Host-side batch metadata the tree branches on (paper §6.1).
+    `total_tokens` and `decode_share` describe the PACKED batch mix for
+    the unified launch (decode rows + chunk tokens in one stream); the
+    per-phase trees ignore them."""
     num_seqs: int
     max_context: int
     group: int  # q heads per kv head
     page_size: int
     decode_share: float = 1.0  # fraction of decode requests in the batch
     avg_query_len: int = 1
+    total_tokens: int = 0  # packed token-stream length (0: per-phase launch)
 
 
 _DECODE_TREE: list[tuple[dict, KernelConfig]] | None = None
 _PREFILL_TREE: list[tuple[dict, KernelConfig]] | None = None
+_UNIFIED_TREE: list[tuple[dict, KernelConfig]] | None = None
 _SUGGESTED_CHUNK: int | None = None
 _LOADED_PATH: str | None = None
 _ENV_CHECKED = False
@@ -64,6 +69,19 @@ def default_decode_config(p: BatchProfile) -> KernelConfig:
 def default_prefill_config(p: BatchProfile) -> KernelConfig:
     # paper Listing 2: bigger Q blocks for long prompts
     bq = 32 if p.avg_query_len >= 4096 else 16
+    return KernelConfig("gqa", block_q=bq)
+
+
+def default_unified_config(p: BatchProfile) -> KernelConfig:
+    """Default tree for the token-packed unified launch: the decode
+    region picks its variant like the decode tree (segmented only helps
+    decode-dominated small batches of long sequences), the chunk region
+    its Q-block like the prefill tree."""
+    bq = 32 if p.avg_query_len >= 4096 else 16
+    if p.decode_share >= 0.5 and p.num_seqs * p.group < 64 \
+            and p.max_context > 2 * p.page_size:
+        segs = max(2, min(16, p.max_context // (8 * p.page_size)))
+        return KernelConfig("segmented", num_segments=segs, block_q=bq)
     return KernelConfig("gqa", block_q=bq)
 
 
@@ -92,6 +110,14 @@ def prefill_config(p: BatchProfile) -> KernelConfig:
     return default_prefill_config(p)
 
 
+def unified_config(p: BatchProfile) -> KernelConfig:
+    if _UNIFIED_TREE is not None:
+        for cond, cfg in _UNIFIED_TREE:
+            if _match(cond, p):
+                return cfg
+    return default_unified_config(p)
+
+
 def validate(cfg: KernelConfig, page_size: int) -> KernelConfig:
     """Clamp a (possibly foreign-arch) tuned config to this cache geometry:
     the Pallas tile view requires tile | page_size. Invalid tiles fall back
@@ -110,7 +136,8 @@ def load(path: str) -> None:
     """Install autotune-exported decision trees (JSON: first-match-wins
     [condition, kernel_config] lists under 'decode_tree' / 'prefill_tree',
     plus an optional roofline-derived 'suggested_max_prefill_tokens')."""
-    global _DECODE_TREE, _PREFILL_TREE, _SUGGESTED_CHUNK, _LOADED_PATH
+    global _DECODE_TREE, _PREFILL_TREE, _UNIFIED_TREE, _SUGGESTED_CHUNK, \
+        _LOADED_PATH
     with open(path) as f:
         raw = json.load(f)
     # parse everything BEFORE assigning any global: a malformed file must
@@ -118,13 +145,17 @@ def load(path: str) -> None:
     decode_tree = _parse_tree(raw["decode_tree"])
     prefill_tree = (_parse_tree(raw["prefill_tree"])
                     if raw.get("prefill_tree") else None)
+    unified_tree = (_parse_tree(raw["unified_tree"])
+                    if raw.get("unified_tree") else None)
     _DECODE_TREE = decode_tree
     _PREFILL_TREE = prefill_tree
+    _UNIFIED_TREE = unified_tree
     _SUGGESTED_CHUNK = raw.get("suggested_max_prefill_tokens")
     _LOADED_PATH = path
     log.info("attention heuristics loaded from %s (%d decode leaves, "
-             "%d prefill leaves)", path, len(_DECODE_TREE),
-             len(_PREFILL_TREE or ()))
+             "%d prefill leaves, %d unified leaves)", path,
+             len(_DECODE_TREE), len(_PREFILL_TREE or ()),
+             len(_UNIFIED_TREE or ()))
 
 
 def loaded_path() -> str | None:
@@ -138,10 +169,11 @@ def suggested_max_prefill_tokens() -> int | None:
 
 
 def reset() -> None:
-    global _DECODE_TREE, _PREFILL_TREE, _SUGGESTED_CHUNK, _LOADED_PATH, \
-        _ENV_CHECKED
+    global _DECODE_TREE, _PREFILL_TREE, _UNIFIED_TREE, _SUGGESTED_CHUNK, \
+        _LOADED_PATH, _ENV_CHECKED
     _DECODE_TREE = None
     _PREFILL_TREE = None
+    _UNIFIED_TREE = None
     _SUGGESTED_CHUNK = None
     _LOADED_PATH = None
     _ENV_CHECKED = False

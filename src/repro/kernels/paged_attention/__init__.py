@@ -1,6 +1,7 @@
 from repro.kernels.paged_attention.ops import (  # noqa: F401
     paged_attention_decode,
     paged_attention_prefill,
+    paged_attention_unified,
     build_qblock_metadata,
     default_tile,
 )

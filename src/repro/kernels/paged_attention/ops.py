@@ -186,6 +186,75 @@ def cdiv_arr(a: jax.Array, b: int) -> jax.Array:
 
 @functools.partial(
     jax.jit,
+    static_argnames=(
+        "num_decode_seqs",
+        "variant",
+        "tile",
+        "num_segments",
+        "block_q",
+        "num_q_blocks",
+        "scale",
+        "interpret",
+    ),
+)
+def paged_attention_unified(
+    q: jax.Array,  # [T, Hq, D] token-packed: decode rows first, then chunks
+    k_pages: jax.Array,  # [Hkv, P, ps, D]
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [S, Np]
+    context_lens: jax.Array,  # [S]
+    query_start_loc: jax.Array,  # [S+1]
+    query_lens: jax.Array,  # [S]
+    *,
+    num_decode_seqs: int = 0,
+    variant: Literal["baseline", "gqa", "segmented"] = "gqa",
+    tile: int | None = None,
+    num_segments: int = 8,
+    block_q: int = 16,
+    num_q_blocks: int | None = None,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One token-packed ragged launch for the whole engine step: decode
+    rows (q == 1), fresh prefill chunks, and resumed/cached chunks share a
+    single [T, Hq, D] token stream described by
+    `query_start_loc`/`query_lens`/`context_lens`.
+
+    The caller lays out the first `num_decode_seqs` sequences as the
+    decode region — exactly one token row per sequence, i.e.
+    `query_start_loc[i] == i` for i <= num_decode_seqs (dead slots carry
+    `context_lens == 0` and produce exact zeros, C5).  That region is
+    STATIC, so the q == 1 rows dispatch through `paged_decode`'s
+    (S, Hkv)-cell grid — no Q-Block packing, no causal inner-loop masking,
+    `group` live MXU rows per cell instead of 1-in-`block_q` — while the
+    remaining rows run the §6.1 Q-Block prefill kernel.  Both regions
+    reuse the existing kernels unchanged, so outputs are bit-identical to
+    the separate decode/prefill launches they replace.
+    """
+    nd = num_decode_seqs
+    t = q.shape[0]
+    assert nd <= t and nd <= query_lens.shape[0], (
+        f"decode region ({nd} rows) exceeds the packed batch "
+        f"(T={t}, S={query_lens.shape[0]})")
+    parts = []
+    if nd:
+        parts.append(paged_attention_decode(
+            q[:nd], k_pages, v_pages, page_table[:nd], context_lens[:nd],
+            variant=variant, tile=tile, num_segments=num_segments,
+            scale=scale, interpret=interpret,
+        ))
+    if t > nd:
+        parts.append(paged_attention_prefill(
+            q[nd:], k_pages, v_pages, page_table[nd:], context_lens[nd:],
+            query_start_loc[nd:] - nd, query_lens[nd:],
+            block_q=block_q, tile=tile, num_q_blocks=num_q_blocks,
+            scale=scale, interpret=interpret,
+        ))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("block_q", "tile", "num_q_blocks", "scale", "interpret"),
 )
 def paged_attention_prefill(

@@ -7,6 +7,9 @@ Modes:
            attends (backend-dispatched)
   decode   [B, 1]; writes one slot per live sequence, then runs the paper's
            paged decode kernel (or the xla gather backend)
+  unified  token-packed [1, T] layout mixing decode rows and ragged
+           prefill chunks; per-token slot_mapping writes + one ragged
+           launch (the paper's unified-kernel serving path)
 
 MLA (deepseek-v2) caches ONLY the compressed latent+rope vector per token
 (576 dims vs 128 heads × 256) and decodes in the absorbed form: all 128
@@ -118,7 +121,21 @@ def attention(cfg: ModelConfig, p, x, positions, *, mode: str,
         pt = meta["page_table"]
         ctx = meta["context_lens"]
         num_pages, ps = cache["k_pages"].shape[2], cache["k_pages"].shape[3]
-        if mode in ("prefill", "prefill_cached"):
+        if mode == "unified":
+            # token-packed step: x is [1, T, d] with per-token absolute
+            # positions (already rope'd above); each token's KV row lands
+            # at the host-computed slot (trash slot for padded tokens),
+            # then ONE ragged launch covers decode rows + every chunk.
+            kp = write_pages(cache["k_pages"], k, meta["slot_mapping"])
+            vp = write_pages(cache["v_pages"], v, meta["slot_mapping"])
+            o = attn_backend.unified_attention(
+                backend, q[0], kp, vp, pt, ctx,
+                meta["query_start_loc"], meta["query_lens"],
+                num_decode_seqs=meta["num_decode_seqs"], scale=scale,
+                kernel_cfg=kernel_cfg,
+            )[None]
+            new_cache = {"k_pages": kp, "v_pages": vp}
+        elif mode in ("prefill", "prefill_cached"):
             qlens = meta["query_lens"]
             pos_abs = positions if positions.ndim == 2 else positions[0]
             valid = (jnp.arange(s)[None, :] < qlens[:, None])

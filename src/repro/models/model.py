@@ -11,10 +11,12 @@ Layers are stacked and executed with jax.lax.scan so compile time is
 independent of depth (essential for the 126-layer dry-run); train mode wraps
 the block body in jax.checkpoint (full remat).
 
-Three entry points mirror the three lowered programs:
+Entry points mirror the lowered programs:
   apply_train(cfg, params, batch)            -> (loss, metrics)
   apply_prefill(cfg, params, cache, batch)   -> (last_logits, new_cache)
   apply_decode(cfg, params, cache, batch)    -> (logits, new_cache)
+  apply_unified(cfg, params, cache, batch)   -> (last_logits, new_cache)
+                                             (token-packed decode+prefill)
 """
 from __future__ import annotations
 
@@ -534,6 +536,43 @@ def apply_prefill_cached(cfg: ModelConfig, params, cache, batch, *,
     last = jnp.clip(batch["query_lens"] - 1, 0)
     out = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
     return out, new_cache
+
+
+def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
+                  kernel_cfg=None, num_decode_seqs: int = 0):
+    """Token-packed unified step: ONE executable for decode rows, fresh
+    prefill chunks, and resumed/cached chunks.
+
+    batch: inputs [1, T] packed token ids, positions [1, T] absolute
+    per-token positions (packed-position RoPE: each token rotates by its
+    own sequence position, not its row index), page_table [S, Np],
+    context_lens [S], query_lens [S], query_start_loc [S+1], and
+    slot_mapping [1, T] pool-local KV write slots (trash slot for padded
+    tokens).  Sequences [0, num_decode_seqs) are the static decode region
+    (one row per batch slot, dead slots context_lens == 0);
+    `num_decode_seqs` is static dispatch metadata like `kernel_cfg`.
+
+    Returns (per-sequence last-token logits [S, V], new_cache).
+    Attention-family models only (SSM/hybrid state is slot-indexed, not
+    page-addressable)."""
+    assert cfg.family in ("dense", "moe", "audio", "vlm") \
+        and not cfg.mla.kv_lora_rank, \
+        f"unified packed step unsupported for family={cfg.family!r}/MLA"
+    meta = {k: batch[k] for k in ("page_table", "context_lens",
+                                  "query_lens", "query_start_loc",
+                                  "slot_mapping")}
+    meta["num_decode_seqs"] = num_decode_seqs
+    logits, new_cache, _ = forward(
+        cfg, params, batch["inputs"], batch["positions"], mode="unified",
+        cache=cache, meta=meta, backend=backend, kernel_cfg=kernel_cfg,
+    )
+    # per-sequence last-token rows of the packed stream ([1, T, V] ->
+    # [S, V]); 0-length (padded) rows clamp to their segment start — the
+    # engine never reads them
+    last = batch["query_start_loc"][:-1] + jnp.clip(
+        batch["query_lens"] - 1, 0)
+    last = jnp.minimum(last, logits.shape[1] - 1)
+    return logits[0, last], new_cache
 
 
 def apply_decode(cfg: ModelConfig, params, cache, batch, *, backend="xla",

@@ -1,47 +1,76 @@
 """Continuous-batching inference engine (the vLLM-v1 analog, paper Fig. 1-2).
 
+Unified token-packed step (`packed_attention=True`, the default for
+attention-family models — the paper's headline design): every scheduled
+piece of work — decode rows (q = 1), fresh prefill chunks, and
+resumed/cached-prefill chunks — is packed into ONE [1, T] token stream and
+executed by ONE `unified` executable per step, the serving-loop analog of
+the paper's single variable-length-batch kernel launch.  The packed layout
+is:
+
+    token row   0 .. max_seqs-1    the STATIC decode region: one row per
+                                   batch slot (paper C5), dead slots
+                                   masked by context_lens == 0
+    token row   max_seqs .. T-1    prefill chunks back-to-back, bucketed
+                                   to a power-of-two total-token count
+
+with ragged metadata (`query_start_loc` / `query_lens` / `context_lens`,
+paper §6.1) plus a per-token `slot_mapping` for the KV page writes and
+per-token absolute positions for packed-position RoPE.  Fresh and resumed
+chunks are the SAME thing here (a chunk is just `context_lens >
+query_lens` when it has prior context), so the three executable families
+of the padded path collapse into one: `compile_events` grows per
+(token-bucket x KernelConfig) — the sequence axis and page-table width
+are static — instead of per kind x batch x seq buckets, and no FLOPs are
+spent on [B, S] padding.  The padded per-kind path is kept behind
+`Engine(packed_attention=False)` — it is the
+differential baseline (tests/test_unified_attention.py proves packed ==
+padded token-for-token) and the fallback for SSM/hybrid/MLA families,
+whose recurrent or latent state is not page-addressable per token.
+
 Static-shape discipline = the TPU analog of CUDA-graph capture (paper §6.2):
-every jitted executable is keyed by a (batch-bucket, seq-bucket) pair; batch
-and prompt lengths are padded up to power-of-two buckets, so a steady-state
-serve loop replays a handful of compiled programs and never recompiles.
-`Engine.compile_events` counts captures (one per bucket), mirroring vLLM's
-one-graph-per-batch-size policy.
+every jitted executable is keyed by its bucket tuple; the packed path
+buckets on the pow2 total-token count alone, the padded path on
+per-kind (batch, seq) buckets — either way a steady-state serve loop
+replays a handful of compiled programs and never recompiles.
+`Engine.compile_events` counts captures, mirroring vLLM's
+one-graph-per-batch-size policy; `Engine.launched_token_slots` counts the
+token rows actually launched (the padding-waste observable the
+`padding-waste` benchmark scenario reports).
 
 Metadata computation (paper §6.1) happens host-side in numpy: page tables,
-context lens, query lens, slot positions; nothing shape-dynamic crosses into
-the compiled functions.
+context lens, query lens, query start locs, slot mappings; nothing
+shape-dynamic crosses into the compiled functions.
 
 Prefix caching (`enable_prefix_caching=True`): the allocator is ref-counted
 and a content-addressed `PrefixCache` indexes every full written page by its
-hash-chained key. Admission reuses the longest cached prefix, and requests
-with a nonzero cached prefix run through a dedicated cached-context prefill
-executable (`prefill_cached` kind) that embeds/computes ONLY the uncached
-suffix and attends over the full paged context (context_lens = cached +
-chunk). Attention-family models only; outputs are equivalent to the
-uncached engine while prefilling strictly fewer tokens.
+hash-chained key. Admission reuses the longest cached prefix and
+embeds/computes ONLY the uncached suffix while attending over the full
+paged context (context_lens = cached + chunk).  Attention-family models
+only; outputs are equivalent to the uncached engine while prefilling
+strictly fewer tokens.
 
 Chunked prefill (`enable_chunked_prefill=True`): the scheduler splits long
-prompts into token-budget-sized chunks across consecutive steps; every
-chunk with `chunk_start > 0` — whether its context comes from an earlier
-chunk or from a prefix-cache hit — resumes through the SAME cached-context
-executable, so prefix caching and chunked prefill converge on one
-resumable-prefill code path.  Chunking only changes WHEN prompt tokens are
-computed, never WHAT is computed: outputs are token-for-token identical to
-the unchunked engine (tests/test_chunked_prefill.py proves it
-differentially).
+prompts into token-budget-sized chunks across consecutive steps; a chunk
+with `chunk_start > 0` — whether its context comes from an earlier chunk
+or from a prefix-cache hit — simply resumes at that context.  Chunking
+only changes WHEN prompt tokens are computed, never WHAT is computed:
+outputs are token-for-token identical to the unchunked engine
+(tests/test_chunked_prefill.py proves it differentially).
 
 Kernel-config dispatch (paper §5/§6.2, Fig. 5): every step builds a
-host-side `BatchProfile` from the scheduled batch's metadata and asks the
-heuristics trees (`decode_config` / `prefill_config` — autotune-exported
-via `heuristics.load()` / $REPRO_ATTN_HEURISTICS, or the paper-shaped
-defaults) for a `KernelConfig`.  The chosen config is STATIC: executables
-are keyed by (kind, batch-bucket, seq-bucket, KernelConfig), so a tree
-that flips variants by batch shape (e.g. `segmented` for small-batch
-long-context decode) replays the already-captured graph for that config
-instead of thrashing `compile_events`.  Profile context/query lengths are
-bucketed to powers of two before tree lookup so the set of distinct
-configs — and hence captures — stays bounded.  Per-step choices surface in
-`step()` stats (`dispatch`) and cumulatively in `Engine.dispatch_counts`.
+host-side `BatchProfile` from the scheduled batch's metadata — including
+`total_tokens` and the decode/prefill mix for packed batches — and asks
+the heuristics trees (`unified_config` / `decode_config` /
+`prefill_config`, autotune-exported via `heuristics.load()` /
+$REPRO_ATTN_HEURISTICS, or the paper-shaped defaults) for a
+`KernelConfig`.  The chosen config is STATIC: executables are keyed by
+(kind, buckets, KernelConfig), so a tree that flips variants by batch
+shape replays the already-captured graph for that config instead of
+thrashing `compile_events`.  Profile lengths are bucketed to powers of two
+before tree lookup so the set of distinct configs — and hence captures —
+stays bounded.  Per-step choices surface in `step()` stats (`dispatch`)
+and cumulatively in `Engine.dispatch_counts`.
 """
 from __future__ import annotations
 
@@ -79,6 +108,7 @@ class Engine:
         max_model_len: int = 2048,
         max_prefill_tokens: int | str = 8192,
         backend: str = "xla",
+        packed_attention: bool = True,
         enable_prefix_caching: bool = False,
         enable_chunked_prefill: bool = False,
         seed: int = 0,
@@ -100,6 +130,18 @@ class Engine:
         # have no attention cache at all)
         self._dispatch_enabled = (
             M.attn_layer_count(cfg) > 0 and not cfg.mla.kv_lora_rank)
+        # the unified token-packed step needs every layer's context to be
+        # page-addressable per token: attention families only (SSM/hybrid
+        # recurrent state is slot-indexed; MLA decodes through the fixed
+        # absorbed-form path).  Unsupported families silently fall back to
+        # the padded per-kind path.
+        self._packed = packed_attention and \
+            cfg.family in ("dense", "moe", "audio", "vlm") and \
+            not cfg.mla.kv_lora_rank
+        if packed_attention and not self._packed:
+            log.info("engine: packed attention unavailable for "
+                     "family=%r/MLA; using the padded per-kind step",
+                     cfg.family)
         self._group = max(1, cfg.num_q_heads // max(cfg.num_kv_heads, 1))
         self.dispatch_counts: collections.Counter = collections.Counter()
         self._last_dispatch: dict[str, dict] = {}
@@ -142,6 +184,7 @@ class Engine:
         self.step_idx = 0
         self.prefilled_tokens = 0  # uncached tokens actually computed
         self.cached_prefill_tokens = 0  # tokens skipped via the prefix cache
+        self.launched_token_slots = 0  # token rows launched (incl. padding)
         self.compile_events: list[tuple] = []  # (kind, b, s, kcfg)/capture
         self._key = jax.random.key(seed)
         self._compiled: dict[tuple, object] = {}
@@ -165,7 +208,17 @@ class Engine:
         key = (kind, b, s, kcfg)
         if key not in self._compiled:
             self.compile_events.append(key)
-            if kind == "prefill":
+            if kind.startswith("unified"):
+                # the whole packed step: b = seq bucket, s = token bucket;
+                # the static decode region (max_seqs rows) is part of the
+                # traced program like the KernelConfig
+                self._compiled[key] = jax.jit(
+                    functools.partial(M.apply_unified, self.cfg,
+                                      backend=self.backend,
+                                      kernel_cfg=kcfg,
+                                      num_decode_seqs=self.max_seqs)
+                )
+            elif kind == "prefill":
                 self._compiled[key] = jax.jit(
                     functools.partial(M.apply_prefill, self.cfg,
                                       backend=self.backend,
@@ -197,17 +250,41 @@ class Engine:
             max_context=next_power_of_2(max(r.total_len for r in reqs)),
             group=self._group, page_size=self.cfg.page_size,
             decode_share=1.0, avg_query_len=1,
+            total_tokens=next_power_of_2(len(reqs)),
         )
 
     def _prefill_profile(self, reqs: list[Request]) -> heuristics.BatchProfile:
         max_ctx = max(r.chunk_start + r.num_scheduled_tokens for r in reqs)
-        avg_q = sum(r.num_scheduled_tokens for r in reqs) // len(reqs)
+        total = sum(r.num_scheduled_tokens for r in reqs)
         return heuristics.BatchProfile(
             num_seqs=len(reqs),
             max_context=next_power_of_2(max_ctx),
             group=self._group, page_size=self.cfg.page_size,
             decode_share=0.0,
-            avg_query_len=next_power_of_2(max(avg_q, 1)),
+            avg_query_len=next_power_of_2(max(total // len(reqs), 1)),
+            total_tokens=next_power_of_2(total),
+        )
+
+    def _unified_profile(self, decode_reqs: list[Request],
+                         prefill_reqs: list[Request]) \
+            -> heuristics.BatchProfile:
+        """Packed-batch profile: the mix features (`total_tokens`,
+        `decode_share`, `avg_query_len`) describe the whole step, since
+        the unified tree tunes the single launch covering both phases."""
+        nseq = len(decode_reqs) + len(prefill_reqs)
+        total = len(decode_reqs) + sum(r.num_scheduled_tokens
+                                       for r in prefill_reqs)
+        max_ctx = max(
+            [r.total_len for r in decode_reqs]
+            + [r.chunk_start + r.num_scheduled_tokens
+               for r in prefill_reqs])
+        return heuristics.BatchProfile(
+            num_seqs=nseq,
+            max_context=next_power_of_2(max_ctx),
+            group=self._group, page_size=self.cfg.page_size,
+            decode_share=len(decode_reqs) / nseq,
+            avg_query_len=next_power_of_2(max(total // nseq, 1)),
+            total_tokens=next_power_of_2(total),
         )
 
     def _dispatch(self, phase: str,
@@ -217,8 +294,9 @@ class Engine:
         tree and record it in the per-step / cumulative dispatch stats."""
         if not self._dispatch_enabled or profile is None:
             return None
-        pick = (heuristics.decode_config if phase == "decode"
-                else heuristics.prefill_config)
+        pick = {"decode": heuristics.decode_config,
+                "unified": heuristics.unified_config}.get(
+                    phase, heuristics.prefill_config)
         kcfg = heuristics.validate(pick(profile), self.cfg.page_size)
         self.dispatch_counts[(phase, kcfg.variant)] += 1
         self._last_dispatch[phase] = {
@@ -226,6 +304,7 @@ class Engine:
             "num_segments": kcfg.num_segments, "block_q": kcfg.block_q,
             "num_seqs": profile.num_seqs,
             "max_context": profile.max_context,
+            "total_tokens": profile.total_tokens,
         }
         return kcfg
 
@@ -291,18 +370,22 @@ class Engine:
             row = self.page_table[req.slot]
             row[: len(req.pages)] = req.pages
 
-        if dec.prefill_reqs:
-            self._run_prefill(dec.prefill_reqs)
-            if self.prefix_cache is not None:
-                for r in dec.prefill_reqs:
-                    # index the now-written full pages (up to this chunk's
-                    # end) so concurrent shared-prefix requests can reuse
-                    # them immediately — even mid-chunked-prefill; the
-                    # cursor keeps the chained hashing O(prompt) overall
-                    r.cache_cursor = self.prefix_cache.insert_incremental(
-                        r.prompt, r.pages, r.context_len, r.cache_cursor)
-        if dec.decode_reqs:
-            self._run_decode(dec.decode_reqs)
+        if self._packed:
+            if dec.decode_reqs or dec.prefill_reqs:
+                self._run_unified(dec.decode_reqs, dec.prefill_reqs)
+        else:
+            if dec.prefill_reqs:
+                self._run_prefill(dec.prefill_reqs)
+            if dec.decode_reqs:
+                self._run_decode(dec.decode_reqs)
+        if dec.prefill_reqs and self.prefix_cache is not None:
+            for r in dec.prefill_reqs:
+                # index the now-written full pages (up to this chunk's
+                # end) so concurrent shared-prefix requests can reuse
+                # them immediately — even mid-chunked-prefill; the
+                # cursor keeps the chained hashing O(prompt) overall
+                r.cache_cursor = self.prefix_cache.insert_incremental(
+                    r.prompt, r.pages, r.context_len, r.cache_cursor)
         stats["dispatch"] = dict(self._last_dispatch)
 
         for req in list(self.sched.running):
@@ -323,6 +406,104 @@ class Engine:
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
         return k
+
+    def _page_slots(self, row: np.ndarray, positions: np.ndarray) \
+            -> np.ndarray:
+        """Pool-local flat KV slots for in-sequence `positions` through one
+        page-table row (host-side §6.1 metadata)."""
+        ps = self.cfg.page_size
+        return row[positions // ps] * ps + positions % ps
+
+    def _run_unified(self, decode_reqs: list[Request],
+                     prefill_reqs: list[Request]) -> None:
+        """Execute the whole step as ONE token-packed launch.
+
+        Layout: rows [0, max_seqs) are the static decode region — sequence
+        i IS batch slot i, one token row each, dead slots masked by
+        context_lens == 0 (so the decode region never changes shape and
+        the steady decode-only state replays a single executable); prefill
+        chunks (fresh AND resumed — a fresh chunk is just context ==
+        query) pack back-to-back behind it, with the chunk-token count
+        bucketed to a power of two.  The sequence axis is fully STATIC at
+        2 * max_seqs (a step schedules at most max_seqs chunks; unused
+        rows are dead, qlen = ctx = 0) and the page table full-width, so
+        executables bucket ONLY on the token count — no per-chunk-count
+        or per-context-depth fragmentation.  Only decode rows and
+        prompt-completing chunks sample."""
+        ms = self.max_seqs
+        ps = self.cfg.page_size
+        n_pref = sum(r.num_scheduled_tokens for r in prefill_reqs)
+        t = ms + (max(next_power_of_2(n_pref), ps) if n_pref else 0)
+        s = 2 * ms
+        # static FULL-width page table (paper C5, like the padded decode
+        # path): dead tiles are masked in-kernel, so executables bucket
+        # ONLY on the token count — context growth never recompiles
+        np_b = self.pages_per_seq
+        trash = self.num_pages * ps  # out-of-range slot: writes dropped
+
+        tokens = np.zeros((1, t), np.int32)
+        pos = np.zeros((1, t), np.int32)
+        slots = np.full((1, t), trash, np.int32)
+        qlens = np.zeros((s,), np.int32)
+        ctx = np.zeros((s,), np.int32)
+        pt = np.zeros((s, np_b), np.int32)
+        temps = np.zeros((s,), np.float32)
+        qsl = np.full((s + 1,), ms, np.int32)
+        qsl[:ms + 1] = np.arange(ms + 1)
+        qlens[:ms] = 1  # every decode row is a 1-token segment (dead rows
+        #                 are masked by ctx == 0, not by qlen)
+        for r in decode_reqs:
+            i = r.slot
+            tokens[0, i] = r.output[-1] if r.output else r.prompt[-1]
+            p = r.total_len - 1
+            pos[0, i] = p
+            ctx[i] = r.total_len
+            row = self.page_table[i]
+            pt[i] = row[:np_b]
+            slots[0, i] = self._page_slots(row, np.asarray(p))
+            temps[i] = r.temperature
+        cur = ms
+        for j, r in enumerate(prefill_reqs):
+            i = ms + j
+            n = r.num_scheduled_tokens
+            chunk = r.prompt[r.chunk_start: r.chunk_start + n]
+            tokens[0, cur: cur + n] = chunk
+            p = np.arange(r.chunk_start, r.chunk_start + n, dtype=np.int32)
+            pos[0, cur: cur + n] = p  # packed-position RoPE: absolute
+            qlens[i] = n
+            ctx[i] = r.chunk_start + n
+            row = self.page_table[r.slot]
+            pt[i] = row[:np_b]
+            slots[0, cur: cur + n] = self._page_slots(row, p)
+            temps[i] = r.temperature
+            cur += n
+            qsl[i + 1:] = cur
+
+        kcfg = self._dispatch(
+            "unified", self._unified_profile(decode_reqs, prefill_reqs))
+        fn = self._get_fn("unified", s, t, kcfg)
+        batch = {
+            "inputs": jnp.asarray(tokens),
+            "positions": self._positions(pos),
+            "page_table": jnp.asarray(pt),
+            "context_lens": jnp.asarray(ctx),
+            "query_lens": jnp.asarray(qlens),
+            "query_start_loc": jnp.asarray(qsl),
+            "slot_mapping": jnp.asarray(slots),
+        }
+        logits, new_cache = fn(self.params, self.cache, batch)
+        self.cache = new_cache
+        self.launched_token_slots += t
+        toks = np.asarray(self._sample_fn(
+            logits, self._next_key(), jnp.asarray(temps)))
+        for r in decode_reqs:
+            r.output.append(int(toks[r.slot]))
+            r.context_len = r.total_len - 1
+        for j, r in enumerate(prefill_reqs):
+            if r.chunk_start + r.num_scheduled_tokens \
+                    == r.num_prompt_tokens:
+                r.output.append(int(toks[ms + j]))
+            r.context_len = r.chunk_start + r.num_scheduled_tokens
 
     def _run_prefill(self, reqs: list[Request]) -> None:
         """Execute one scheduled chunk per request.  Chunks starting at
@@ -379,6 +560,7 @@ class Engine:
             "query_lens": jnp.asarray(qlens),
         }
         logits, new_cache = fn(self.params, cache_in, batch)
+        self.launched_token_slots += b * s
         self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
         self._finish_chunk(reqs, logits)
 
@@ -421,6 +603,7 @@ class Engine:
             "query_lens": jnp.asarray(qlens),
         }
         logits, new_cache = fn(self.params, cache_in, batch)
+        self.launched_token_slots += b * s
         self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
         self._finish_chunk(reqs, logits)
 
@@ -445,6 +628,7 @@ class Engine:
         }
         logits, new_cache = fn(self.params, self.cache, batch)
         self.cache = new_cache
+        self.launched_token_slots += b
         toks = np.asarray(
             self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
         )

@@ -31,7 +31,13 @@ cache hit composes with chunking as "a first chunk that starts at
 context = matched_len" — both land on the same resumable-prefill path.
 On finish/preemption, full written pages are donated back to the cache
 (they become evictable, not free), so multi-turn, preempt-resume, and
-chunk-resume traffic re-admits nearly for free.
+chunk-resume traffic re-admits nearly for free.  Admission is also
+prefix-AWARE in ordering: the waiting queue (head pinned, so misses are
+delayed but never starved) is stable-sorted by cached-prefix length each
+step, so once one request of a shared-prefix group has prefilled (and the
+engine has indexed its pages), the rest of the group is admitted together
+in the next step and hits the cache — instead of interleaving with
+unrelated misses and re-prefilling the prefix.
 
 Outputs host-side ScheduleDecision objects; all array metadata is built by
 the engine (paper §6.1 'computation of metadata').
@@ -87,6 +93,9 @@ class Scheduler:
         self.waiting: list[Request] = []
         self.running: list[Request] = []
         self._free_slots = list(range(max_seqs - 1, -1, -1))
+        # per-step memo of _order_waiting's match results, reused by the
+        # admit loop: (evictions watermark, {req_id: matched pages})
+        self._match_memo: tuple[int, dict] | None = None
 
     def add(self, req: Request) -> None:
         # a request whose final length can never be resident (pool
@@ -159,6 +168,44 @@ class Scheduler:
         max_full = (req.num_prompt_tokens - 1) // self.alloc.page_size
         return pages[:max_full]
 
+    def _order_waiting(self) -> None:
+        """Prefix-aware admission ordering: stable-sort the waiting queue
+        by descending cached-prefix length so requests sharing a cached
+        prefix are admitted in the same step.  The engine indexes a
+        prefill's written pages the step they are computed, so once the
+        FIRST request of a shared-prefix group lands its pages in the
+        cache, the whole group jumps ahead of unrelated misses and is
+        admitted together — every member but the first admits nearly for
+        free (only uncached tokens charge the budget).
+
+        Fairness: the queue HEAD is pinned — the oldest waiting request
+        (or a just-preempted one, re-queued at position 0) keeps absolute
+        admission priority, so a sustained stream of cache-hit arrivals
+        can delay a miss by at most the queue ahead of it, never starve
+        it.  Stability keeps FIFO among equal matches.  Cost per step is
+        O(matched_pages + 1) hashes per waiting request (`match` walks
+        the chain lazily and stops at the first miss), and the sort is
+        skipped entirely on steps that cannot admit."""
+        if self.prefix_cache is None or len(self.waiting) < 3:
+            return
+        head, rest = self.waiting[0], self.waiting[1:]
+        matched = {r.req_id: self._match_prefix(r) for r in rest}
+        rest.sort(key=lambda r: -len(matched[r.req_id]))
+        self.waiting[:] = [head] + rest
+        # hand the walked chains to the admit loop so it does not re-hash
+        # them; keyed to the eviction counter — an allocation-triggered
+        # eviction mid-admission invalidates every memoized match (the
+        # pages may be gone), falling back to a fresh walk
+        self._match_memo = (self.alloc.evictions, matched)
+
+    def _memoized_match(self, req: Request) -> list[int]:
+        memo = self._match_memo
+        if memo is not None and memo[0] == self.alloc.evictions:
+            pages = memo[1].get(req.req_id)
+            if pages is not None:
+                return pages
+        return self._match_prefix(req)
+
     def _schedule_chunk(self, req: Request, chunk: int) -> None:
         """Plan `chunk` prompt tokens starting at the request's progress
         mark.  The engine executes the chunk this step; a request whose
@@ -174,6 +221,7 @@ class Scheduler:
     def step(self, step_idx: int) -> ScheduleDecision:
         preempted: list[Request] = []
         budget = self.max_prefill_tokens
+        self._match_memo = None  # stale across steps: donations add pages
 
         # --- 1. decode pass: grow pages, preempting if needed -------------
         decode_reqs: list[Request] = []
@@ -224,6 +272,8 @@ class Scheduler:
             prefill_reqs.append(req)
 
         # --- 3. admit prefills --------------------------------------------
+        if self._free_slots and budget > 0:
+            self._order_waiting()
         while self.waiting and self._free_slots and budget > 0:
             req = self.waiting[0]
             if not self.alloc.fits_pool(req.num_prompt_tokens
@@ -235,7 +285,7 @@ class Scheduler:
                 self.waiting.pop(0)
                 req.state = State.FINISHED
                 continue
-            cached_pages = self._match_prefix(req)
+            cached_pages = self._memoized_match(req)
             num_cached = len(cached_pages) * self.alloc.page_size
             remaining = req.num_prompt_tokens - num_cached
             if self.enable_chunked_prefill:

@@ -5,6 +5,8 @@ import json
 import os
 import tempfile
 
+import pytest
+
 from repro.autotune.costmodel import (
     Scenario, decode_time, prefill_time, split_phases,
     suggest_max_prefill_tokens,
@@ -75,6 +77,7 @@ def test_export_load_dispatch_roundtrip():
         raw = json.load(open(path))
         assert raw["decode_tree"]
         assert raw["prefill_tree"]  # PR-3: both phases export
+        assert raw["unified_tree"]  # PR-5: the packed-launch tree
         assert raw["suggested_max_prefill_tokens"] >= 16
         H.load(path)
         try:
@@ -88,6 +91,11 @@ def test_export_load_dispatch_roundtrip():
                 num_seqs=2, max_context=8192, group=4, page_size=16,
                 decode_share=0.0, avg_query_len=1024))
             assert pcfg in PREFILL_SPACE  # came from the fitted tree
+            ucfg = H.unified_config(H.BatchProfile(
+                num_seqs=8, max_context=8192, group=4, page_size=16,
+                decode_share=0.5, avg_query_len=256, total_tokens=1024))
+            from repro.autotune.microbench import UNIFIED_SPACE
+            assert ucfg in UNIFIED_SPACE  # came from the fitted tree
             assert H.suggested_max_prefill_tokens() == \
                 raw["suggested_max_prefill_tokens"]
         finally:
@@ -214,6 +222,20 @@ def test_costmodel_phase_split():
     # empty phases cost nothing
     assert decode_time(pre, variant="gqa", tile=16) == 0.0
     assert prefill_time(dec, block_q=16, tile=16) == 0.0
+    # the unified (token-packed) launch does the same work in ONE
+    # dispatch: both phases' compute, one launch overhead saved
+    from repro.autotune.costmodel import LAUNCH_OVERHEAD_S, unified_time
+    assert unified_time(mixed, variant="gqa", tile=16) == pytest.approx(
+        decode_time(dec, variant="gqa", tile=16)
+        + prefill_time(pre, block_q=16, tile=16) - LAUNCH_OVERHEAD_S)
+    # single-phase packed batches save nothing (there is only one launch)
+    assert unified_time(dec, variant="gqa", tile=16) == pytest.approx(
+        decode_time(dec, variant="gqa", tile=16))
+    # measure(unified=True) is exactly the packed-launch cost the
+    # unified tree is fit on
+    assert measure(mixed, cfg, unified=True) == pytest.approx(
+        unified_time(mixed, variant=cfg.variant, tile=cfg.tile,
+                     num_segments=cfg.num_segments, block_q=cfg.block_q))
 
 
 def test_explicit_load_wins_over_env(monkeypatch):

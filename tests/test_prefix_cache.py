@@ -18,6 +18,8 @@ from repro.core.paged.allocator import (
     OutOfPages, PageAllocator, RefCountedPageAllocator,
 )
 from repro.serving.prefix_cache import PrefixCache, chain_keys
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler
 
 PS = 16  # page size used by the reduced configs
 
@@ -169,6 +171,87 @@ def test_refcount_invariants_under_pressure(data):
             pages, toks = held[data.draw(st.integers(0, len(held) - 1))]
             cache.insert(toks, pages, len(pages) * PS)
         alloc.check_invariants([p for p, _ in held])
+
+
+# ---------------------------------------------------------------------------
+# prefix-aware admission ordering (scheduler-level, no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_aware_admission_ordering():
+    """Requests sharing a cached prefix jump the queue TOGETHER: once the
+    first request's pages are indexed, the waiting queue is stable-sorted
+    by cached-prefix length, so the whole group is admitted in the same
+    step (each member hitting the cache) ahead of an unrelated miss that
+    arrived between them — FIFO is preserved among equal matches."""
+    alloc = RefCountedPageAllocator(32, PS)
+    cache = PrefixCache(alloc, PS)
+    sched = Scheduler(alloc, max_seqs=2, max_prefill_tokens=8192,
+                      prefix_cache=cache)
+    shared = list(range(2 * PS))
+    a = Request(prompt=shared + [7, 8], max_new_tokens=2)
+    sched.add(a)
+    dec = sched.step(0)
+    assert dec.prefill_reqs == [a]
+    # engine-analog: the chunk executed and its full pages were indexed
+    a.context_len = a.num_prompt_tokens
+    cache.insert(a.prompt, a.pages, a.context_len)
+    a.output = [1, 2]
+    sched.finish(a)
+    b = Request(prompt=shared + [9], max_new_tokens=2)
+    d = Request(prompt=list(range(900, 900 + 3 * PS)), max_new_tokens=2)
+    c = Request(prompt=shared + [10], max_new_tokens=2)
+    for r in (b, d, c):  # the unrelated miss arrives BETWEEN the sharers
+        sched.add(r)
+    dec = sched.step(1)
+    assert dec.prefill_reqs == [b, c], \
+        [r.req_id for r in dec.prefill_reqs]
+    assert b.num_cached_tokens == 2 * PS
+    assert c.num_cached_tokens == 2 * PS
+    assert d.state is State.WAITING
+    # misses keep FIFO: d admits next step, still uncached
+    for r in dec.prefill_reqs:
+        r.context_len = r.num_prompt_tokens
+        r.output = [1, 2]
+    for r in list(sched.running):
+        sched.finish(r)
+    dec = sched.step(2)
+    assert dec.prefill_reqs == [d] and d.num_cached_tokens == 0
+
+
+def test_admission_ordering_never_starves_the_head():
+    """Fairness: the oldest waiting request (the queue head) keeps
+    absolute admission priority even when newer arrivals carry cached
+    prefixes — hit streams delay misses, never starve them."""
+    alloc = RefCountedPageAllocator(32, PS)
+    cache = PrefixCache(alloc, PS)
+    sched = Scheduler(alloc, max_seqs=2, max_prefill_tokens=8192,
+                      prefix_cache=cache)
+    shared = list(range(2 * PS))
+    seed_pages = alloc.allocate(2)
+    cache.insert(shared, seed_pages, 2 * PS)  # a warm cached prefix
+    alloc.free(seed_pages)  # parked evictable, matchable
+    miss = Request(prompt=list(range(700, 700 + PS)), max_new_tokens=2)
+    hit1 = Request(prompt=shared + [1], max_new_tokens=2)
+    hit2 = Request(prompt=shared + [2], max_new_tokens=2)
+    for r in (miss, hit1, hit2):
+        sched.add(r)
+    dec = sched.step(0)
+    assert miss in dec.prefill_reqs  # head admitted despite 0 match
+    assert hit1 in dec.prefill_reqs and hit2 not in dec.prefill_reqs
+    assert hit1.num_cached_tokens == 2 * PS
+
+
+def test_admission_ordering_without_cache_stays_fifo():
+    """No prefix cache: the waiting queue is never reordered."""
+    alloc = RefCountedPageAllocator(32, PS)
+    sched = Scheduler(alloc, max_seqs=2, max_prefill_tokens=8192)
+    reqs = [Request(prompt=list(range(i, i + 4)), max_new_tokens=2)
+            for i in range(3)]
+    for r in reqs:
+        sched.add(r)
+    dec = sched.step(0)
+    assert dec.prefill_reqs == reqs[:2]  # FIFO into the two slots
 
 
 # ---------------------------------------------------------------------------

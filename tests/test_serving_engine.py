@@ -61,10 +61,11 @@ def test_engine_static_decode_batch_and_bucketing(smollm):
     seq-bucket, KernelConfig) — decode always uses the static max_seqs
     batch, prefill one (batch, seq) bucket per shape, and the kernel-config
     dispatch adds AT MOST one capture per distinct config (never one per
-    step)."""
+    step).  This documents the PADDED per-kind path (the packed default's
+    bucketing contract lives in test_unified_attention.py)."""
     cfg, params = smollm
     rng = np.random.default_rng(3)
-    eng = H.build_engine(cfg, params)
+    eng = H.build_engine(cfg, params, packed_attention=False)
     H.run_requests(eng, H.make_prompts(cfg, rng, (5, 9, 17, 33, 12, 7)),
                    max_new_tokens=4)
     decode_events = [e for e in eng.compile_events if e[0] == "decode"]
@@ -100,7 +101,9 @@ def test_engine_dispatch_switches_variant_by_batch_shape(smollm):
     """With a tuned tree installed the engine demonstrably switches kernel
     variants by batch shape: a lone long-context request decodes through
     `segmented`, a 4-wide short-context batch through `gqa` — and every
-    step's choice surfaces in the stats."""
+    step's choice surfaces in the stats.  (Padded path: the decode tree
+    only steers per-kind launches; the packed analog is
+    test_packed_dispatch_uses_unified_tree.)"""
     cfg, params = smollm
     rng = np.random.default_rng(5)
     with tempfile.TemporaryDirectory() as d:
@@ -108,13 +111,13 @@ def test_engine_dispatch_switches_variant_by_batch_shape(smollm):
         try:
             # 4 short requests: num_seqs > 1 -> gqa leaf
             wide = H.run_requests(
-                H.build_engine(cfg, params),
+                H.build_engine(cfg, params, packed_attention=False),
                 H.make_prompts(cfg, rng, (8, 11, 5, 9)), max_new_tokens=4)
             assert wide.engine.dispatch_counts[("decode", "gqa")] > 0
             assert wide.engine.dispatch_counts[("decode", "segmented")] == 0
             # 1 long request: num_seqs == 1, context >= 64 -> segmented
             deep = H.run_requests(
-                H.build_engine(cfg, params),
+                H.build_engine(cfg, params, packed_attention=False),
                 H.make_prompts(cfg, rng, (60,)), max_new_tokens=8)
             assert deep.engine.dispatch_counts[("decode", "segmented")] > 0
             disp = [st["dispatch"]["decode"] for st in deep.step_stats
@@ -159,14 +162,16 @@ def test_engine_per_config_executable_caching(smollm):
     """Per-(bucket x KernelConfig) executable reuse: recurring configs
     replay the captured graph — re-serving an identical workload adds ZERO
     captures, every capture key is unique, and a variant flip mid-serve
-    costs exactly one capture for the new config."""
+    costs exactly one capture for the new config.  (Padded path; the
+    packed equivalent is covered in test_unified_attention.py.)"""
     cfg, params = smollm
     rng = np.random.default_rng(6)
     prompts = H.make_prompts(cfg, rng, (9, 14))
     with tempfile.TemporaryDirectory() as d:
         heuristics.load(_install_tree(d))
         try:
-            eng = H.build_engine(cfg, params, max_seqs=2)
+            eng = H.build_engine(cfg, params, max_seqs=2,
+                                 packed_attention=False)
 
             def serve():
                 # the short request drains first; the survivor decodes
