@@ -11,24 +11,28 @@ test-full:
 
 # Serving + scheduler subset: the packed/padded unified-attention and
 # chunked-prefill differential suites, prefix caching + admission
-# ordering, engine/scheduler behavior, the allocator property tests, and
-# the autotune sweep/round-trip tests — kernel sweeps and arch matrices
-# (-m slow) don't gate it.
+# ordering, engine/scheduler behavior, the allocator property tests, the
+# autotune sweep/round-trip tests, and the observability suite (metrics
+# registry + telemetry-instrumented serving) — kernel sweeps and arch
+# matrices (-m slow) don't gate it.
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" \
 	  tests/test_unified_attention.py tests/test_chunked_prefill.py \
 	  tests/test_serving_engine.py tests/test_prefix_cache.py \
 	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py \
-	  tests/test_autotune.py
+	  tests/test_autotune.py tests/test_obs_metrics.py \
+	  tests/test_obs_serving.py
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/run.py
 
-# CPU-side smoke (<120s): the padding-waste scenario — packed vs padded
+# CPU-side smoke (<120s): padding-waste (packed vs padded
 # launched-token-slot and compile_events counts on a mixed trace; fails
-# if packing stops paying.
+# if packing stops paying) + the telemetry-overhead guard (metrics
+# enabled must cost < 5% wall-clock).  Writes BENCH_e2e.json.
 bench-smoke:
-	PYTHONPATH=src $(PY) benchmarks/e2e_latency.py --scenario padding-waste
+	PYTHONPATH=src $(PY) benchmarks/e2e_latency.py --scenario smoke \
+	  --json-out BENCH_e2e.json
 
 # Offline autotune (paper Fig. 5): cost-model sweep -> decision trees +
 # chunk budget in tuned/attn.{json,py} — seconds on a CPU host.  Serve

@@ -49,6 +49,14 @@ def main():
     ap.add_argument("--hardware", action="store_true",
                     help="time the real Pallas kernels (TPU) instead of "
                          "the analytic cost model")
+    ap.add_argument("--refit-from", default=None, metavar="GRID.json",
+                    help="refit the trees from a serving-telemetry "
+                         "latency grid (examples/serve_paged.py "
+                         "--metrics-dir writes latency_grid.json) instead "
+                         "of running the offline sweep")
+    ap.add_argument("--min-count", type=int, default=1,
+                    help="with --refit-from: drop grid entries observed "
+                         "fewer than this many warm launches")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -56,6 +64,21 @@ def main():
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
     path_json, path_py = args.out + ".json", args.out + ".py"
+
+    if args.refit_from:
+        from repro.autotune.tune import refit_from_telemetry
+        rep = refit_from_telemetry(args.refit_from, path_json, path_py,
+                                   min_count=args.min_count)
+        print(f"refit from {args.refit_from} -> {path_json} + {path_py}")
+        for phase, st in rep["phases"].items():
+            print(f"{phase}: {st['profiles']} observed profiles, "
+                  f"{st['observed_points']} observed (profile, config) "
+                  f"points, calibration x{st['calibration_ratio']:.3g}, "
+                  f"tuned-vs-best-fixed "
+                  f"{st['tuned_vs_untuned_speedup']:.3f}x")
+        print(f"\nserve with it:\n"
+              f"  python examples/serve_paged.py --heuristics {path_json}")
+        return
     rep = tune_and_export(
         path_json, path_py, use_hardware=args.hardware, seed=args.seed,
         max_seqs=args.max_seqs, target_context=args.target_context,

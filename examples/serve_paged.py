@@ -47,6 +47,14 @@ def main():
                          "examples/autotune_attn.py); default: run a "
                          "quick cost-model tune inline. "
                          "$REPRO_ATTN_HEURISTICS works too.")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="enable telemetry and write DIR/metrics.prom "
+                         "(Prometheus text), DIR/metrics.jsonl (snapshot) "
+                         "and DIR/latency_grid.json (the refit input for "
+                         "examples/autotune_attn.py --refit-from)")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="enable telemetry and write a Chrome/Perfetto "
+                         "trace (load at https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch]).replace(dtype="float32")
@@ -79,12 +87,17 @@ def main():
         budget = heuristics.suggested_max_prefill_tokens() or 32
     else:
         budget = 8192
+    tel = None
+    if args.metrics_dir or args.trace_out:
+        from repro.obs import Telemetry
+        tel = Telemetry()
     eng = Engine(cfg, params, max_seqs=4, num_pages=96, max_model_len=256,
                  backend=args.backend,
                  packed_attention=not args.padded,
                  enable_prefix_caching=args.prefix_caching,
                  enable_chunked_prefill=args.chunked_prefill,
-                 max_prefill_tokens=budget)
+                 max_prefill_tokens=budget,
+                 telemetry=tel)
     rng = np.random.default_rng(0)
     shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
     prompts = [shared + list(rng.integers(1, cfg.vocab_size,
@@ -127,6 +140,28 @@ def main():
               f"{st['cache_misses']} misses, "
               f"{eng.cached_prefill_tokens} prompt tokens reused, "
               f"{st['cache_evictions']} evictions")
+    if tel is not None:
+        s = tel.summary()
+        print(f"telemetry: ttft p50={s['ttft_p50']:.4f}s "
+              f"p95={s['ttft_p95']:.4f}s, itl p50={s['itl_p50']:.4f}s, "
+              f"step p50={s['step_p50']:.4f}s, "
+              f"padding waste={s['padding_waste']:.1%}")
+        if args.metrics_dir:
+            os.makedirs(args.metrics_dir, exist_ok=True)
+            tel.export_prometheus(
+                os.path.join(args.metrics_dir, "metrics.prom"))
+            tel.write_snapshot(
+                os.path.join(args.metrics_dir, "metrics.jsonl"),
+                arch=args.arch, steps=steps)
+            grid_path = os.path.join(args.metrics_dir, "latency_grid.json")
+            tel.export_latency_grid(grid_path)
+            print(f"metrics -> {args.metrics_dir}/ "
+                  f"(refit: python examples/autotune_attn.py "
+                  f"--refit-from {grid_path})")
+        if args.trace_out:
+            tel.export_trace(args.trace_out)
+            print(f"trace -> {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
     heuristics.reset()
 
 

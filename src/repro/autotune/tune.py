@@ -12,12 +12,16 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 
-from repro.autotune.costmodel import split_phases, suggest_max_prefill_tokens
+from repro.autotune.costmodel import (
+    Scenario, split_phases, suggest_max_prefill_tokens,
+)
 from repro.autotune.microbench import (
     ARCH_DEFAULTS, DECODE_SPACE, PREFILL_SPACE, UNIFIED_SPACE, SweepResult,
-    scenario_grid, sweep,
+    measure, scenario_grid, sweep,
 )
+from repro.core.attention.heuristics import KernelConfig
 
 FEATURES = ("num_seqs", "max_context", "group", "decode_share",
             "avg_query_len", "total_tokens")
@@ -127,6 +131,148 @@ def regret_report(results, space, tree: Node) -> dict:
         "tuned_vs_oracle_overhead": tuned / oracle - 1.0,
         "max_pointwise_speedup": worst_speedup,
     }
+
+
+_PHASE_SPACES = {"decode": DECODE_SPACE, "prefill": PREFILL_SPACE,
+                 "unified": UNIFIED_SPACE}
+
+
+def scenario_from_profile(profile: dict, arch: dict,
+                          phase: str) -> Scenario:
+    """Synthesize a cost-model `Scenario` that reproduces a production
+    `BatchProfile`'s feature vector (the telemetry latency grid's keys).
+
+    The engine buckets profiles before dispatch, so an exact
+    reconstruction is impossible and unnecessary: the tree only splits on
+    FEATURES, and those are derived properties this scenario reproduces —
+    `num_seqs`, `max_context`, `group` (via synthesized head counts),
+    `decode_share`, `avg_query_len`, `total_tokens` (approximately, from
+    the bucketed values).  Prefill rows are clamped to q >= 2: a q == 1
+    row would be misclassified as decode by `split_phases`."""
+    kv = int(arch.get("num_kv_heads", ARCH_DEFAULTS["num_kv_heads"]))
+    n = max(int(profile["num_seqs"]), 1)
+    ctx = max(int(profile["max_context"]), 1)
+    if phase == "decode":
+        qlens = (1,) * n
+    elif phase == "prefill":
+        q = min(max(int(profile["avg_query_len"]), 2), ctx)
+        qlens = (q,) * n
+    else:  # unified: reproduce the packed decode/prefill mix
+        n_dec = min(int(round(n * float(profile["decode_share"]))), n)
+        n_pre = n - n_dec
+        if n_pre:
+            q = (int(profile["total_tokens"]) - n_dec) // n_pre
+            qlens = (1,) * n_dec + (min(max(q, 2), ctx),) * n_pre
+        else:
+            qlens = (1,) * n
+    return Scenario(
+        num_seqs=n, context_lens=(ctx,) * n, query_lens=qlens,
+        num_q_heads=max(int(profile["group"]), 1) * kv, num_kv_heads=kv,
+        head_dim=int(arch.get("head_dim", ARCH_DEFAULTS["head_dim"])),
+        page_size=int(profile["page_size"])
+        or int(arch.get("page_size", ARCH_DEFAULTS["page_size"])),
+    )
+
+
+def _cfg_key(cfg: KernelConfig) -> tuple:
+    return (cfg.variant, cfg.tile, cfg.num_segments, cfg.block_q)
+
+
+def refit_from_telemetry(grid, path_json: str | None = None,
+                         path_listing: str | None = None, *,
+                         min_count: int = 1, max_depth: int = 3,
+                         min_leaf: int = 2) -> dict:
+    """Refit the heuristics trees from a serving-telemetry latency grid
+    (`obs.Telemetry.latency_grid()` / `export_latency_grid`), closing the
+    telemetry→autotune loop: production launches replace the offline
+    sweep as the measurement source.
+
+    Production only observes the config the CURRENT tree dispatched per
+    profile, so a naive refit would have nothing to compare against.  The
+    gap is filled with the analytic cost model, CALIBRATED to the
+    observations: unobserved configs get `predicted * ratio`, where
+    `ratio` is the per-phase median of observed/predicted over the
+    (profile, config) pairs that WERE observed — absolute scale comes
+    from production, relative config ranking from the model.  Observed
+    configs outside the base search space are appended to it, so a
+    hand-rolled or previously-refit config stays representable.
+
+    `grid` is the dict or a path to its JSON.  Entries with fewer than
+    `min_count` warm launches are dropped (single launches are noisy).
+    Returns a report; writes a `heuristics.load`-compatible JSON to
+    `path_json` (the `decode_tree` key is always present, as `load`
+    requires) and a Listing-2-style rendering to `path_listing`."""
+    if isinstance(grid, str):
+        with open(grid) as f:
+            grid = json.load(f)
+    arch = dict(ARCH_DEFAULTS)
+    arch.update(grid.get("arch") or {})
+
+    # phase -> profile(frozen) -> {config key: observed mean seconds}
+    by_phase: dict[str, dict[tuple, dict[tuple, float]]] = {}
+    for e in grid.get("entries", ()):
+        if e["count"] < min_count or e["phase"] not in _PHASE_SPACES:
+            continue
+        prof = tuple(sorted(e["profile"].items()))
+        c = e["config"]
+        key = (c["variant"], c.get("tile"), c.get("num_segments", 8),
+               c.get("block_q", 16))
+        by_phase.setdefault(e["phase"], {}).setdefault(prof, {})[key] = \
+            e["mean_s"]
+
+    payload: dict = {"decode_tree": []}
+    report: dict = {"phases": {}}
+    listings: list[tuple[str, str]] = []
+    for phase, profiles in sorted(by_phase.items()):
+        space = list(_PHASE_SPACES[phase])
+        known = {_cfg_key(c) for c in space}
+        for cfgs in profiles.values():
+            for key in cfgs:
+                if key not in known:
+                    known.add(key)
+                    space.append(KernelConfig(
+                        key[0], tile=key[1], num_segments=key[2],
+                        block_q=key[3]))
+        # pass 1: predict every config per profile; collect calibration
+        # ratios where the dispatched config was actually observed
+        rows, ratios = [], []
+        for prof, cfgs in profiles.items():
+            sc = scenario_from_profile(dict(prof), arch, phase)
+            pred = {i: measure(sc, c, unified=(phase == "unified"))
+                    for i, c in enumerate(space)}
+            rows.append((sc, cfgs, pred))
+            for i, c in enumerate(space):
+                p = pred[i]
+                if _cfg_key(c) in cfgs and math.isfinite(p) and p > 0:
+                    ratios.append(cfgs[_cfg_key(c)] / p)
+        ratio = sorted(ratios)[len(ratios) // 2] if ratios else 1.0
+        # pass 2: observed where we have it, calibrated model elsewhere
+        results = [SweepResult(sc, {
+            i: cfgs.get(_cfg_key(c), pred[i] * ratio)
+            for i, c in enumerate(space)})
+            for sc, cfgs, pred in rows]
+        tree = fit_tree(results, space, max_depth=max_depth,
+                        min_leaf=min_leaf)
+        payload[f"{phase}_tree"] = flatten(tree, space)
+        stats = regret_report(results, space, tree)
+        stats.update(profiles=len(results), space_size=len(space),
+                     observed_points=sum(len(c) for c in
+                                         profiles.values()),
+                     calibration_ratio=ratio)
+        report["phases"][phase] = stats
+        listings.append((phase, to_listing(tree, space)))
+
+    if path_json:
+        with open(path_json, "w") as f:
+            json.dump(payload, f, indent=1)
+    if path_listing:
+        with open(path_listing, "w") as f:
+            f.write("# decision trees refit from serving telemetry\n")
+            for phase, listing in listings:
+                f.write(f"# --- {phase} ---\n")
+                f.write(listing)
+    report["payload"] = payload
+    return report
 
 
 def tune_and_export(path_json: str, path_listing: str | None = None, *,

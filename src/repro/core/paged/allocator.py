@@ -88,6 +88,22 @@ class PageAllocator:
         assert set(flat).isdisjoint(self._free), "allocated page in free list"
         assert len(flat) + len(self._free) == self.num_pages - 1
 
+    def stats(self) -> dict:
+        """Pool-occupancy snapshot (`free_pages` here is TRULY free pages,
+        unlike the `free_pages` property on the ref-counted subclass which
+        reports allocatable capacity incl. evictable pages).  Keys are
+        uniform across both allocators so Engine.step() stats and the
+        telemetry pool gauges need no isinstance branching."""
+        return {
+            "free_pages": len(self._free),
+            "referenced_pages": len(self._allocated),
+            "evictable_pages": 0,
+            "shared_pages": 0,
+            "cached_pages": 0,
+            "total_refs": len(self._allocated),
+            "evictions": 0,
+        }
+
 
 class RefCountedPageAllocator(PageAllocator):
     """Ref-counted pool with an LRU pool of cached-but-unreferenced pages.
@@ -218,3 +234,14 @@ class RefCountedPageAllocator(PageAllocator):
             and evict.isdisjoint(free), "page in two pools"
         assert len(ref) + len(evict) + len(free) == self.num_pages - 1
         assert evict <= self._cached, "evictable page not cache-indexed"
+
+    def stats(self) -> dict:
+        return {
+            "free_pages": len(self._free),
+            "referenced_pages": len(self._ref),
+            "evictable_pages": len(self._evictable),
+            "shared_pages": sum(1 for c in self._ref.values() if c > 1),
+            "cached_pages": len(self._cached),
+            "total_refs": sum(self._ref.values()),
+            "evictions": self.evictions,
+        }

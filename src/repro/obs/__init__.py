@@ -1,0 +1,21 @@
+"""Observability: metrics registry, step/request tracing, and the
+telemetry→autotune refit loop's latency-grid export.
+
+Dependency-free by design (stdlib only) so the serving stack can always
+import it; see docs/observability.md for the metric/trace/refit schema.
+"""
+from .clock import Clock, FakeClock, PerfCounterClock
+from .metrics import (
+    LATENCY_BUCKETS_S, TOKEN_BUCKETS, Counter, Gauge, Histogram, Registry,
+    pow2_buckets,
+)
+from .telemetry import Telemetry
+from .tracing import RequestRecord, RequestTracker, Tracer
+
+__all__ = [
+    "Clock", "FakeClock", "PerfCounterClock",
+    "Counter", "Gauge", "Histogram", "Registry", "pow2_buckets",
+    "LATENCY_BUCKETS_S", "TOKEN_BUCKETS",
+    "Tracer", "RequestTracker", "RequestRecord",
+    "Telemetry",
+]

@@ -1,0 +1,272 @@
+"""Step timelines and request lifecycle tracing.
+
+Two layers:
+
+* `Tracer` — a bounded in-memory buffer of Chrome/Perfetto trace events
+  (the `chrome://tracing` / https://ui.perfetto.dev JSON array format).
+  The engine wraps each `block_until_ready`-bounded region of a step
+  (schedule, pack, launch, sample, host bookkeeping) in a span, so a
+  step renders as a stacked timeline per track.
+* `RequestTracker` — per-request lifecycle records (arrival → admission →
+  chunk completions → first token → finish) that yield the serving
+  metrics that matter to a caller: TTFT (time to first token), ITL
+  (inter-token latency), queue time, and preemption counts.  Each event
+  feeds the metrics registry (histograms/counters) and, when a tracer is
+  attached, emits one "X" event per finished request on its own
+  `req-<id>` track so request lifetimes can be eyeballed against step
+  spans in the same Perfetto view.
+
+All timestamps come from an injectable `Clock` (default
+`time.perf_counter`), so lifecycle math is exactly testable with a
+`FakeClock`.
+"""
+from __future__ import annotations
+
+import json
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+from .clock import Clock, PerfCounterClock
+from .metrics import LATENCY_BUCKETS_S, Registry
+
+
+class Tracer:
+    """Bounded Chrome trace-event buffer.
+
+    Events use the "trace event format": complete events (`ph: "X"`) with
+    `ts`/`dur` in microseconds, grouped by `(pid, tid)`; named tracks are
+    realized as thread-name metadata events (`ph: "M"`).  Once `capacity`
+    events are buffered, further events are dropped and counted — a long
+    serving run degrades to a truncated trace, never to unbounded memory.
+    """
+
+    def __init__(self, clock: Clock | None = None, capacity: int = 500_000,
+                 pid: int = 1, process_name: str = "repro-serving"):
+        self.clock = clock or PerfCounterClock()
+        self.capacity = capacity
+        self.pid = pid
+        self.dropped = 0
+        self._events: list[dict] = []
+        self._meta: list[dict] = [{
+            "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "args": {"name": process_name},
+        }]
+        self._tids: dict[str, int] = {}
+
+    def _tid(self, track: str) -> int:
+        tid = self._tids.get(track)
+        if tid is None:
+            tid = len(self._tids) + 1
+            self._tids[track] = tid
+            self._meta.append({
+                "name": "thread_name", "ph": "M", "pid": self.pid,
+                "tid": tid, "args": {"name": track},
+            })
+        return tid
+
+    def _push(self, ev: dict) -> None:
+        if len(self._events) >= self.capacity:
+            self.dropped += 1
+            return
+        self._events.append(ev)
+
+    def complete(self, name: str, t0: float, t1: float,
+                 track: str = "engine", **args) -> None:
+        """Record a finished span [t0, t1] (seconds) on `track`."""
+        self._push({
+            "name": name, "ph": "X", "ts": t0 * 1e6,
+            "dur": max(t1 - t0, 0.0) * 1e6,
+            "pid": self.pid, "tid": self._tid(track), "args": args,
+        })
+
+    def instant(self, name: str, t: float | None = None,
+                track: str = "engine", **args) -> None:
+        if t is None:
+            t = self.clock.now()
+        self._push({
+            "name": name, "ph": "i", "ts": t * 1e6, "s": "t",
+            "pid": self.pid, "tid": self._tid(track), "args": args,
+        })
+
+    @contextmanager
+    def span(self, name: str, track: str = "engine", **args):
+        t0 = self.clock.now()
+        try:
+            yield
+        finally:
+            self.complete(name, t0, self.clock.now(), track=track, **args)
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def events(self) -> list[dict]:
+        return list(self._events)
+
+    def to_json(self) -> dict:
+        return {"traceEvents": self._meta + self._events,
+                "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f)
+
+
+@dataclass
+class RequestRecord:
+    """Lifecycle milestones of one request (seconds on the trace clock)."""
+
+    req_id: int
+    submit_t: float
+    prompt_tokens: int = 0
+    admit_t: float | None = None
+    first_token_t: float | None = None
+    finish_t: float | None = None
+    last_token_t: float | None = None
+    num_tokens: int = 0
+    num_chunks: int = 0
+    preemptions: int = 0
+    queue_time: float = 0.0
+    # True while the request sits in the waiting queue (initially, and
+    # again after every preemption); the next chunk/token event closes
+    # the wait that started at `_wait_since`.
+    queued: bool = True
+    _wait_since: float = field(default=0.0, repr=False)
+
+    @property
+    def ttft(self) -> float | None:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def e2e(self) -> float | None:
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.submit_t
+
+
+class RequestTracker:
+    """Folds request lifecycle events into metrics + trace events."""
+
+    def __init__(self, metrics: Registry, tracer: Tracer | None = None,
+                 clock: Clock | None = None):
+        self.metrics = metrics
+        self.tracer = tracer
+        self.clock = clock or (tracer.clock if tracer else PerfCounterClock())
+        self.records: dict[int, RequestRecord] = {}
+        self._ttft = metrics.histogram(
+            "repro_request_ttft_seconds",
+            "Submit-to-first-sampled-token latency.",
+            buckets=LATENCY_BUCKETS_S)
+        self._itl = metrics.histogram(
+            "repro_request_itl_seconds",
+            "Inter-token latency between consecutive sampled tokens.",
+            buckets=LATENCY_BUCKETS_S)
+        self._queue = metrics.histogram(
+            "repro_request_queue_seconds",
+            "Time spent waiting for admission (initial + re-admission "
+            "after preemption).",
+            buckets=LATENCY_BUCKETS_S)
+        self._e2e = metrics.histogram(
+            "repro_request_e2e_seconds",
+            "Submit-to-finish latency.",
+            buckets=LATENCY_BUCKETS_S)
+        self._events = metrics.counter(
+            "repro_request_events_total",
+            "Request lifecycle events by type.",
+            labelnames=("event",))
+
+    def _now(self, t: float | None) -> float:
+        return self.clock.now() if t is None else t
+
+    def _dequeue(self, rec: RequestRecord, t: float) -> None:
+        wait = max(t - rec._wait_since, 0.0)
+        rec.queue_time += wait
+        rec.queued = False
+        if rec.admit_t is None:
+            rec.admit_t = t
+        self._queue.observe(wait)
+
+    def submit(self, req, t: float | None = None) -> RequestRecord:
+        t = self._now(t)
+        rec = RequestRecord(
+            req_id=req.req_id, submit_t=t,
+            prompt_tokens=len(getattr(req, "prompt", ()) or ()),
+            _wait_since=t)
+        self.records[req.req_id] = rec
+        self._events.inc(event="submitted")
+        return rec
+
+    def chunk(self, req, t: float | None = None) -> None:
+        """A prefill chunk for `req` completed this step."""
+        rec = self.records.get(req.req_id)
+        if rec is None:
+            return
+        t = self._now(t)
+        rec.num_chunks += 1
+        if rec.queued:
+            self._dequeue(rec, t)
+        self._events.inc(event="chunk")
+
+    def token(self, req, t: float | None = None) -> None:
+        """One token was sampled for `req` this step."""
+        rec = self.records.get(req.req_id)
+        if rec is None:
+            return
+        t = self._now(t)
+        if rec.queued:  # decode-only admission path (no prefill chunk seen)
+            self._dequeue(rec, t)
+        rec.num_tokens += 1
+        if rec.first_token_t is None:
+            rec.first_token_t = t
+            self._ttft.observe(t - rec.submit_t)
+            if self.tracer:
+                self.tracer.instant("first_token", t,
+                                    track=f"req-{rec.req_id}")
+        else:
+            self._itl.observe(t - rec.last_token_t)
+        rec.last_token_t = t
+        self._events.inc(event="token")
+
+    def preempt(self, req, t: float | None = None) -> None:
+        rec = self.records.get(req.req_id)
+        if rec is None:
+            return
+        t = self._now(t)
+        rec.preemptions += 1
+        rec.queued = True
+        rec._wait_since = t
+        self._events.inc(event="preempted")
+        if self.tracer:
+            self.tracer.instant("preempted", t, track=f"req-{rec.req_id}")
+
+    def finish(self, req, t: float | None = None) -> None:
+        rec = self.records.get(req.req_id)
+        if rec is None:
+            return
+        t = self._now(t)
+        rec.finish_t = t
+        self._e2e.observe(t - rec.submit_t)
+        self._events.inc(event="finished")
+        if self.tracer:
+            self.tracer.complete(
+                f"request {rec.req_id}", rec.submit_t, t,
+                track=f"req-{rec.req_id}",
+                ttft=rec.ttft, tokens=rec.num_tokens,
+                chunks=rec.num_chunks, preemptions=rec.preemptions,
+                queue=rec.queue_time)
+
+    def summary(self) -> dict:
+        """Aggregate lifecycle stats over all finished requests."""
+        done = [r for r in self.records.values() if r.finish_t is not None]
+        out = {
+            "requests": len(self.records),
+            "finished": len(done),
+            "preemptions": sum(r.preemptions for r in self.records.values()),
+            "tokens": sum(r.num_tokens for r in self.records.values()),
+        }
+        for name, hist in (("ttft", self._ttft), ("itl", self._itl),
+                           ("e2e", self._e2e), ("queue", self._queue)):
+            out[f"{name}_p50"] = hist.quantile(0.5)
+            out[f"{name}_p95"] = hist.quantile(0.95)
+        return out

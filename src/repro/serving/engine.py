@@ -112,10 +112,21 @@ class Engine:
         enable_prefix_caching: bool = False,
         enable_chunked_prefill: bool = False,
         seed: int = 0,
+        telemetry=None,
     ):
         self.cfg = cfg
         self.params = params
         self.backend = backend
+        # obs.Telemetry | None.  None (the default) disables every hook
+        # AND the block_until_ready timing barriers — the serving loop
+        # stays exactly as asynchronous as before.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.set_arch(
+                num_q_heads=cfg.num_q_heads,
+                num_kv_heads=max(cfg.num_kv_heads, 1),
+                head_dim=cfg.resolved_head_dim,
+                page_size=cfg.page_size)
         self.max_seqs = max_seqs
         self.num_pages = num_pages
         self.pages_per_seq = cdiv(max_model_len, cfg.page_size)
@@ -174,11 +185,13 @@ class Engine:
                     "prefix caching / chunked prefill need page-addressable "
                     f"context (unsupported for family={cfg.family!r}/MLA)")
         if enable_prefix_caching:
-            self.prefix_cache = PrefixCache(self.alloc, cfg.page_size)
+            self.prefix_cache = PrefixCache(self.alloc, cfg.page_size,
+                                            telemetry=telemetry)
         self.sched = Scheduler(self.alloc, max_seqs=max_seqs,
                                max_prefill_tokens=max_prefill_tokens,
                                prefix_cache=self.prefix_cache,
-                               enable_chunked_prefill=enable_chunked_prefill)
+                               enable_chunked_prefill=enable_chunked_prefill,
+                               telemetry=telemetry)
         self.cache = M.make_cache(cfg, max_seqs=max_seqs, num_pages=num_pages)
         self.page_table = np.zeros((max_seqs, self.pages_per_seq), np.int32)
         self.step_idx = 0
@@ -299,6 +312,8 @@ class Engine:
                     phase, heuristics.prefill_config)
         kcfg = heuristics.validate(pick(profile), self.cfg.page_size)
         self.dispatch_counts[(phase, kcfg.variant)] += 1
+        if self.telemetry is not None:
+            self.telemetry.record_dispatch(phase, kcfg.variant)
         self._last_dispatch[phase] = {
             "variant": kcfg.variant, "tile": kcfg.tile,
             "num_segments": kcfg.num_segments, "block_q": kcfg.block_q,
@@ -342,8 +357,14 @@ class Engine:
     # ------------------------------------------------------------------
 
     def step(self) -> dict:
+        tel = self.telemetry
+        t_step = tel.clock.now() if tel else 0.0
         self._last_dispatch = {}
         dec = self.sched.step(self.step_idx)
+        if tel:
+            tel.record_phase("schedule", t_step, tel.clock.now(),
+                             decode=len(dec.decode_reqs),
+                             prefill=len(dec.prefill_reqs))
         new_tokens = dec.scheduled_prefill_tokens
         # cached tokens are reported on a request's FIRST chunk (the one
         # starting exactly at the matched prefix); later chunk-resumes
@@ -388,12 +409,21 @@ class Engine:
                     r.prompt, r.pages, r.context_len, r.cache_cursor)
         stats["dispatch"] = dict(self._last_dispatch)
 
+        t_host = tel.clock.now() if tel else 0.0
         for req in list(self.sched.running):
             if req.prefill_done and req.done:
                 slot = req.slot  # finish() releases the slot
                 self.sched.finish(req)
                 if slot is not None:
                     self.page_table[slot] = 0
+        # pool occupancy AFTER finishes released their pages, so the
+        # snapshot matches the harness's pages-conserved invariant
+        stats["pool"] = self.alloc.stats()
+        if tel:
+            t_end = tel.clock.now()
+            tel.record_phase("host", t_host, t_end)
+            tel.record_step(t0=t_step, t1=t_end, decision=dec,
+                            stats=stats, engine=self)
         self.step_idx += 1
         return stats
 
@@ -430,6 +460,8 @@ class Engine:
         executables bucket ONLY on the token count — no per-chunk-count
         or per-context-depth fragmentation.  Only decode rows and
         prompt-completing chunks sample."""
+        tel = self.telemetry
+        t_pack = tel.clock.now() if tel else 0.0
         ms = self.max_seqs
         ps = self.cfg.page_size
         n_pref = sum(r.num_scheduled_tokens for r in prefill_reqs)
@@ -479,8 +511,9 @@ class Engine:
             cur += n
             qsl[i + 1:] = cur
 
-        kcfg = self._dispatch(
-            "unified", self._unified_profile(decode_reqs, prefill_reqs))
+        profile = self._unified_profile(decode_reqs, prefill_reqs)
+        kcfg = self._dispatch("unified", profile)
+        pre_captures = len(self.compile_events)
         fn = self._get_fn("unified", s, t, kcfg)
         batch = {
             "inputs": jnp.asarray(tokens),
@@ -491,19 +524,40 @@ class Engine:
             "query_start_loc": jnp.asarray(qsl),
             "slot_mapping": jnp.asarray(slots),
         }
+        if tel:
+            t_launch = tel.clock.now()
+            tel.record_phase("pack", t_pack, t_launch, tokens=t)
         logits, new_cache = fn(self.params, self.cache, batch)
+        if tel:
+            compiled = len(self.compile_events) > pre_captures
+            timed = compiled or tel.time_this_launch()
+            if timed:
+                jax.block_until_ready(logits)
+            tel.record_launch(
+                "unified", profile, kcfg, t_launch, tel.clock.now(),
+                compiled=compiled, tokens=t, timed=timed)
         self.cache = new_cache
         self.launched_token_slots += t
+        t_sample = tel.clock.now() if tel else 0.0
         toks = np.asarray(self._sample_fn(
             logits, self._next_key(), jnp.asarray(temps)))
+        if tel:
+            tel.record_phase("sample", t_sample, tel.clock.now())
         for r in decode_reqs:
             r.output.append(int(toks[r.slot]))
             r.context_len = r.total_len - 1
+            if tel:
+                tel.requests.token(r)
         for j, r in enumerate(prefill_reqs):
-            if r.chunk_start + r.num_scheduled_tokens \
-                    == r.num_prompt_tokens:
+            done = (r.chunk_start + r.num_scheduled_tokens
+                    == r.num_prompt_tokens)
+            if done:
                 r.output.append(int(toks[ms + j]))
             r.context_len = r.chunk_start + r.num_scheduled_tokens
+            if tel:
+                tel.requests.chunk(r)
+                if done:
+                    tel.requests.token(r)
 
     def _run_prefill(self, reqs: list[Request]) -> None:
         """Execute one scheduled chunk per request.  Chunks starting at
@@ -521,10 +575,12 @@ class Engine:
 
     def _finish_chunk(self, reqs: list[Request], logits) -> None:
         """Advance progress; sample first tokens for prompts now complete."""
+        tel = self.telemetry
         done = [(i, r) for i, r in enumerate(reqs)
                 if r.chunk_start + r.num_scheduled_tokens
                 == r.num_prompt_tokens]
         if done:
+            t_sample = tel.clock.now() if tel else 0.0
             temps = np.zeros((logits.shape[0],), np.float32)
             for i, r in done:
                 temps[i] = r.temperature
@@ -532,10 +588,20 @@ class Engine:
                 logits, self._next_key(), jnp.asarray(temps)))
             for i, r in done:
                 r.output.append(int(toks[i]))
+            if tel:
+                tel.record_phase("sample", t_sample, tel.clock.now())
         for r in reqs:
             r.context_len = r.chunk_start + r.num_scheduled_tokens
+        if tel:
+            done_set = {r.req_id for _, r in done}
+            for r in reqs:
+                tel.requests.chunk(r)
+                if r.req_id in done_set:
+                    tel.requests.token(r)
 
     def _run_prefill_fresh(self, reqs: list[Request]) -> None:
+        tel = self.telemetry
+        t_pack = tel.clock.now() if tel else 0.0
         b = next_power_of_2(len(reqs))
         max_len = max(r.num_scheduled_tokens for r in reqs)
         s = max(next_power_of_2(max_len), self.cfg.page_size)
@@ -550,7 +616,9 @@ class Engine:
             pt[i] = self.page_table[r.slot]
 
         cache_in = self._prefill_cache_view(b)
-        kcfg = self._dispatch("prefill", self._prefill_profile(reqs))
+        profile = self._prefill_profile(reqs)
+        kcfg = self._dispatch("prefill", profile)
+        pre_captures = len(self.compile_events)
         fn = self._get_fn("prefill", b, s, kcfg)
         batch = {
             "inputs": jnp.asarray(tokens),
@@ -559,7 +627,19 @@ class Engine:
             "context_lens": jnp.asarray(qlens),
             "query_lens": jnp.asarray(qlens),
         }
+        if tel:
+            t_launch = tel.clock.now()
+            tel.record_phase("pack", t_pack, t_launch, tokens=b * s)
         logits, new_cache = fn(self.params, cache_in, batch)
+        if tel:
+            compiled = len(self.compile_events) > pre_captures
+            timed = compiled or tel.time_this_launch()
+            if timed:
+                jax.block_until_ready(logits)
+            tel.record_launch(
+                "prefill", profile, kcfg, t_launch, tel.clock.now(),
+                compiled=compiled, tokens=b * s, grid_phase="prefill",
+                timed=timed)
         self.launched_token_slots += b * s
         self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
         self._finish_chunk(reqs, logits)
@@ -569,6 +649,8 @@ class Engine:
         chunk; attention reads the prior context — earlier chunks and/or a
         shared cached prefix — back from the pages
         (context_lens = chunk_start + chunk)."""
+        tel = self.telemetry
+        t_pack = tel.clock.now() if tel else 0.0
         b = next_power_of_2(len(reqs))
         max_chunk = max(r.num_scheduled_tokens for r in reqs)
         s = max(next_power_of_2(max_chunk), self.cfg.page_size)
@@ -593,7 +675,9 @@ class Engine:
             pt[i] = self.page_table[r.slot][:np_b]
 
         cache_in = self._prefill_cache_view(b)
-        kcfg = self._dispatch("prefill_cached", self._prefill_profile(reqs))
+        profile = self._prefill_profile(reqs)
+        kcfg = self._dispatch("prefill_cached", profile)
+        pre_captures = len(self.compile_events)
         fn = self._get_fn(f"prefill_cached/np{np_b}", b, s, kcfg)
         batch = {
             "inputs": jnp.asarray(tokens),
@@ -602,12 +686,26 @@ class Engine:
             "context_lens": jnp.asarray(ctx),
             "query_lens": jnp.asarray(qlens),
         }
+        if tel:
+            t_launch = tel.clock.now()
+            tel.record_phase("pack", t_pack, t_launch, tokens=b * s)
         logits, new_cache = fn(self.params, cache_in, batch)
+        if tel:
+            compiled = len(self.compile_events) > pre_captures
+            timed = compiled or tel.time_this_launch()
+            if timed:
+                jax.block_until_ready(logits)
+            tel.record_launch(
+                "prefill_cached", profile, kcfg, t_launch, tel.clock.now(),
+                compiled=compiled, tokens=b * s, grid_phase="prefill",
+                timed=timed)
         self.launched_token_slots += b * s
         self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
         self._finish_chunk(reqs, logits)
 
     def _run_decode(self, reqs: list[Request]) -> None:
+        tel = self.telemetry
+        t_pack = tel.clock.now() if tel else 0.0
         b = self.max_seqs  # static decode batch (paper C5)
         tokens = np.zeros((b, 1), np.int32)
         pos = np.full((b, 1), -1, np.int32)
@@ -618,7 +716,9 @@ class Engine:
             pos[r.slot, 0] = r.total_len - 1
             ctx[r.slot] = r.total_len
             temps[r.slot] = r.temperature
-        kcfg = self._dispatch("decode", self._decode_profile(reqs))
+        profile = self._decode_profile(reqs)
+        kcfg = self._dispatch("decode", profile)
+        pre_captures = len(self.compile_events)
         fn = self._get_fn("decode", b, 1, kcfg)
         batch = {
             "inputs": jnp.asarray(tokens),
@@ -626,15 +726,31 @@ class Engine:
             "page_table": jnp.asarray(self.page_table),
             "context_lens": jnp.asarray(ctx),
         }
+        if tel:
+            t_launch = tel.clock.now()
+            tel.record_phase("pack", t_pack, t_launch, tokens=b)
         logits, new_cache = fn(self.params, self.cache, batch)
+        if tel:
+            compiled = len(self.compile_events) > pre_captures
+            timed = compiled or tel.time_this_launch()
+            if timed:
+                jax.block_until_ready(logits)
+            tel.record_launch(
+                "decode", profile, kcfg, t_launch, tel.clock.now(),
+                compiled=compiled, tokens=b, timed=timed)
         self.cache = new_cache
         self.launched_token_slots += b
+        t_sample = tel.clock.now() if tel else 0.0
         toks = np.asarray(
             self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
         )
+        if tel:
+            tel.record_phase("sample", t_sample, tel.clock.now())
         for r in reqs:
             r.output.append(int(toks[r.slot]))
             r.context_len = r.total_len - 1
+            if tel:
+                tel.requests.token(r)
 
     # ------------------------------------------------------------------
     # slot-indexed (SSM) cache plumbing

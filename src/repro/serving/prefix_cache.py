@@ -73,9 +73,11 @@ def chain_keys(tokens: Sequence[int], page_size: int) -> Iterator[bytes]:
 class PrefixCache:
     """Content-addressed index: page-chain key -> physical page id."""
 
-    def __init__(self, alloc: RefCountedPageAllocator, page_size: int):
+    def __init__(self, alloc: RefCountedPageAllocator, page_size: int,
+                 telemetry=None):
         self.alloc = alloc
         self.page_size = page_size
+        self.telemetry = telemetry  # obs.Telemetry | None
         self._page_of: dict[bytes, int] = {}  # chain key -> page id
         self._key_of: dict[int, bytes] = {}   # page id   -> chain key
         alloc.on_evict = self._on_evict
@@ -92,6 +94,8 @@ class PrefixCache:
         key = self._key_of.pop(page, None)
         if key is not None:
             del self._page_of[key]
+        if self.telemetry is not None:
+            self.telemetry.cache_event("eviction")
 
     # -- queries -----------------------------------------------------------
 
@@ -113,6 +117,10 @@ class PrefixCache:
             self.hit_tokens += num_cached_tokens
         else:
             self.misses += 1
+        if self.telemetry is not None:
+            self.telemetry.cache_event(
+                "hit" if num_cached_tokens > 0 else "miss",
+                tokens=num_cached_tokens)
 
     # -- registration ------------------------------------------------------
 

@@ -83,13 +83,15 @@ class Scheduler:
     def __init__(self, allocator: PageAllocator, *, max_seqs: int,
                  max_prefill_tokens: int = 8192,
                  prefix_cache: PrefixCache | None = None,
-                 enable_chunked_prefill: bool = False):
+                 enable_chunked_prefill: bool = False,
+                 telemetry=None):
         assert max_prefill_tokens > 0, "token budget must be positive"
         self.alloc = allocator
         self.max_seqs = max_seqs
         self.max_prefill_tokens = max_prefill_tokens
         self.prefix_cache = prefix_cache
         self.enable_chunked_prefill = enable_chunked_prefill
+        self.telemetry = telemetry  # obs.Telemetry | None
         self.waiting: list[Request] = []
         self.running: list[Request] = []
         self._free_slots = list(range(max_seqs - 1, -1, -1))
@@ -107,6 +109,8 @@ class Scheduler:
             f"{self.alloc.pages_needed(req.num_prompt_tokens + req.max_new_tokens)}"
             f" pages, pool holds {self.alloc.num_pages - 1}")
         self.waiting.append(req)
+        if self.telemetry is not None:
+            self.telemetry.requests.submit(req)
 
     @property
     def has_work(self) -> bool:
@@ -132,6 +136,9 @@ class Scheduler:
         req.state = State.FINISHED
         self._free_request(req)
         self.running.remove(req)
+        if self.telemetry is not None:
+            self.telemetry.scheduler_event("finished")
+            self.telemetry.requests.finish(req)
 
     def _preempt(self, req: Request) -> None:
         """Evict `req` from the batch back to the head of the wait queue.
@@ -151,6 +158,9 @@ class Scheduler:
         req.cache_cursor = None
         self.running.remove(req)
         self.waiting.insert(0, req)
+        if self.telemetry is not None:
+            self.telemetry.scheduler_event("preempted")
+            self.telemetry.requests.preempt(req)
 
     def _preempt_one(self) -> Request | None:
         if not self.running:
@@ -262,6 +272,8 @@ class Scheduler:
                          - req.num_computed_tokens)
             chunk = min(chunk, coverable)
             if chunk <= 0:
+                if self.telemetry is not None:
+                    self.telemetry.scheduler_event("stalled")
                 continue  # stalled: no empty chunks, wait for free pages
             need = self.alloc.pages_to_cover(
                 len(req.pages), req.num_computed_tokens + chunk)
@@ -284,6 +296,9 @@ class Scheduler:
                 # with what it produced instead of blocking the queue
                 self.waiting.pop(0)
                 req.state = State.FINISHED
+                if self.telemetry is not None:
+                    self.telemetry.scheduler_event("rejected")
+                    self.telemetry.requests.finish(req)
                 continue
             cached_pages = self._memoized_match(req)
             num_cached = len(cached_pages) * self.alloc.page_size
@@ -319,6 +334,8 @@ class Scheduler:
             budget -= chunk
             self.running.append(req)
             prefill_reqs.append(req)
+            if self.telemetry is not None:
+                self.telemetry.scheduler_event("admitted")
 
         # --- liveness backstop --------------------------------------------
         # Every resident request is a stalled chunked prefill (they jointly

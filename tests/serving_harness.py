@@ -103,6 +103,14 @@ def assert_step_invariants(eng: Engine, stats: dict) -> None:
         assert (stats["prefill_tokens"] + stats["decode"]
                 <= max(sched.max_prefill_tokens, stats["decode"])), stats
     eng.alloc.check_invariants([r.pages for r in sched.running])
+    # the allocator snapshot surfaced in step stats must agree with the
+    # pool it describes: states partition [1, num_pages) and outstanding
+    # refs equal the running requests' page-list multiplicity
+    pool = stats["pool"]
+    assert (pool["free_pages"] + pool["referenced_pages"]
+            + pool["evictable_pages"] == eng.alloc.num_pages - 1), pool
+    assert pool["total_refs"] == sum(
+        len(r.pages) for r in sched.running), pool
 
 
 def run_requests(eng: Engine, prompts, *, max_new_tokens: int = 8,
@@ -127,6 +135,79 @@ def run_requests(eng: Engine, prompts, *, max_new_tokens: int = 8,
             [r.state for r in reqs]
         assert eng.alloc.free_pages == eng.num_pages - 1, "pages leaked"
     return RunResult(eng, reqs, stats)
+
+
+# ---------------------------------------------------------------------------
+# telemetry cross-check
+# ---------------------------------------------------------------------------
+
+
+def assert_telemetry_consistent(res: RunResult) -> None:
+    """The telemetry subsystem must agree with the engine's own ground
+    truth: every counter it accumulated over a drained run is re-derivable
+    from engine state and the per-step stats the harness collected."""
+    eng = res.engine
+    tel = eng.telemetry
+    assert tel is not None, "run the engine with telemetry=Telemetry()"
+    m = tel.metrics
+
+    assert m.value("repro_steps_total") == res.num_steps
+    assert (m.value("repro_launched_token_slots_total")
+            == eng.launched_token_slots)
+    assert (m.value("repro_tokens_total", kind="sampled")
+            == sum(len(r.output) for r in res.requests))
+    assert (m.value("repro_tokens_total", kind="prefill")
+            == res.total("prefill_tokens"))
+    assert (m.value("repro_tokens_total", kind="cached_prefill")
+            == res.total("cached_tokens") == eng.cached_prefill_tokens)
+    assert (m.value("repro_scheduler_events_total", event="preempted")
+            == res.total("preempted"))
+
+    # one capture counter tick per engine compile event, one dispatch
+    # counter tick per engine dispatch decision
+    snap = m.snapshot()
+    compiles = sum(s["value"] for s
+                   in snap["repro_compile_events_total"]["series"])
+    assert compiles == len(eng.compile_events)
+    for (phase, variant), n in eng.dispatch_counts.items():
+        assert m.value("repro_dispatch_total",
+                       phase=phase, variant=variant) == n
+
+    # request lifecycle records: every submitted request tracked, token
+    # counts exact per request
+    recs = tel.requests.records
+    assert len(recs) == len(res.requests)
+    for r in res.requests:
+        rec = recs[r.req_id]
+        assert rec.num_tokens == len(r.output), (rec, r.output)
+        assert rec.prompt_tokens == r.num_prompt_tokens
+        if r.output:
+            assert rec.first_token_t is not None
+            assert rec.ttft is not None and rec.ttft >= 0.0
+
+    # pool gauges reflect the allocator at the last step
+    pool = eng.alloc.stats()
+    for state in ("free", "referenced", "evictable", "shared", "cached"):
+        assert (m.value("repro_pool_pages", state=state)
+                == pool[f"{state}_pages"]), state
+    assert m.value("repro_pool_page_refs") == pool["total_refs"]
+
+    # padding accounting: waste ratio is a true fraction of launched slots
+    waste = m.value("repro_padding_waste_ratio")
+    assert 0.0 <= waste < 1.0, waste
+
+    # the trace buffer must hold a loadable Chrome trace: step spans plus
+    # one lifetime span per finished request
+    doc = tel.tracer.to_json()
+    names = [ev["name"] for ev in doc["traceEvents"]]
+    assert names.count("step") == res.num_steps
+    for r in res.requests:
+        if r.done:
+            assert f"request {r.req_id}" in names
+    for ev in doc["traceEvents"]:
+        assert {"name", "ph", "pid", "tid"} <= set(ev), ev
+        if ev["ph"] == "X":
+            assert ev["ts"] >= 0.0 and ev["dur"] >= 0.0, ev
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,343 @@
+"""Observability primitives: metrics registry, tracer, request tracker.
+
+Pure-host unit tests — no engine, no jax.  Everything timestamped runs on
+a FakeClock or explicit `t=` arguments, so lifecycle math (TTFT, ITL,
+queue time across preemptions) is asserted exactly, not approximately.
+"""
+import dataclasses
+import json
+import math
+from types import SimpleNamespace
+
+import pytest
+
+from repro.obs import (FakeClock, Registry, RequestTracker, Telemetry,
+                       Tracer, pow2_buckets)
+from repro.obs.metrics import fmt_float
+
+
+# ---------------------------------------------------------------------------
+# buckets + rendering helpers
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_buckets():
+    assert pow2_buckets(1.0, 8.0) == (1.0, 2.0, 4.0, 8.0)
+    assert pow2_buckets(1e-6, 128.0)[0] == 1e-6
+    assert pow2_buckets(1.0, 5.0) == (1.0, 2.0, 4.0, 8.0)  # doubles past hi
+    with pytest.raises(AssertionError):
+        pow2_buckets(0.0, 1.0)
+
+
+def test_fmt_float():
+    assert fmt_float(math.inf) == "+Inf"
+    assert fmt_float(-math.inf) == "-Inf"
+    assert fmt_float(4.0) == "4"
+    assert fmt_float(0.25) == "0.25"
+
+
+# ---------------------------------------------------------------------------
+# counters / gauges
+# ---------------------------------------------------------------------------
+
+
+def test_counter_inc_and_labels():
+    r = Registry()
+    c = r.counter("hits_total", "hits", labelnames=("kind",))
+    c.inc(kind="a")
+    c.inc(2.5, kind="a")
+    c.inc(kind="b")
+    assert c.value(kind="a") == 3.5
+    assert c.value(kind="b") == 1.0
+    assert c.value(kind="missing") == 0.0  # untouched series read as 0
+    assert r.value("hits_total", kind="a") == 3.5
+    with pytest.raises(AssertionError):
+        c.inc(-1.0, kind="a")  # counters are monotone
+    with pytest.raises(ValueError):
+        c.inc(wrong_label="a")  # label names are declared, not ad hoc
+
+
+def test_gauge_set_inc_dec():
+    g = Registry().gauge("depth", "", labelnames=("q",))
+    g.set(4, q="waiting")
+    g.inc(2, q="waiting")
+    g.dec(q="waiting")
+    assert g.value(q="waiting") == 5.0
+
+
+def test_registry_get_or_create_and_type_conflicts():
+    r = Registry()
+    a = r.counter("x_total", labelnames=("k",))
+    assert r.counter("x_total", labelnames=("k",)) is a
+    with pytest.raises(ValueError):
+        r.gauge("x_total", labelnames=("k",))  # kind mismatch
+    with pytest.raises(ValueError):
+        r.counter("x_total", labelnames=("other",))  # label mismatch
+
+
+# ---------------------------------------------------------------------------
+# histograms
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_bucketing_le_inclusive():
+    h = Registry().histogram("lat", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 1.5, 4.0, 100.0):  # bound values land IN the bucket
+        h.observe(v)
+    got = h.get()
+    assert got["count"] == 5
+    assert got["sum"] == pytest.approx(107.0)
+    # cumulative counts per le-bound, overflow in +Inf
+    assert got["buckets"] == {"1": 2, "2": 3, "4": 4, "+Inf": 5}
+
+
+def test_histogram_quantile_interpolation():
+    h = Registry().histogram("lat", buckets=(1.0, 2.0, 4.0))
+    for _ in range(4):
+        h.observe(1.5)  # all mass in (1, 2]
+    assert h.quantile(0.5) == pytest.approx(1.5)  # midpoint of the bucket
+    assert h.quantile(1.0) == pytest.approx(2.0)
+    assert Registry().histogram("empty").quantile(0.5) is None
+    over = Registry().histogram("over", buckets=(1.0, 2.0))
+    over.observe(50.0)
+    assert over.quantile(0.99) == 2.0  # overflow clamps to largest bound
+
+
+def test_histogram_labeled_series_independent():
+    h = Registry().histogram("lat", labelnames=("phase",), buckets=(1.0,))
+    h.observe(0.5, phase="pack")
+    h.observe(0.7, phase="launch")
+    assert h.get(phase="pack")["count"] == 1
+    assert h.get(phase="launch")["count"] == 1
+    assert h.get(phase="sample") is None
+
+
+# ---------------------------------------------------------------------------
+# cardinality cap
+# ---------------------------------------------------------------------------
+
+
+def test_label_cardinality_cap_drops_and_counts():
+    r = Registry(max_series_per_family=2)
+    c = r.counter("req_total", labelnames=("req_id",))
+    c.inc(req_id="1")
+    c.inc(req_id="2")
+    c.inc(req_id="3")  # past the cap: dropped, counted, no growth
+    c.inc(req_id="4")
+    assert len(c) == 2
+    assert c.dropped == 2
+    assert r.dropped_series == 2
+    assert c.value(req_id="3") == 0.0
+    c.inc(req_id="1")  # existing series still updatable past the cap
+    assert c.value(req_id="1") == 2.0
+
+
+# ---------------------------------------------------------------------------
+# exports
+# ---------------------------------------------------------------------------
+
+
+def _populated_registry() -> Registry:
+    r = Registry()
+    r.counter("repro_hits_total", "hits by kind",
+              labelnames=("kind",)).inc(3, kind='we"ird\nlabel')
+    r.gauge("repro_depth", "queue depth").set(7)
+    h = r.histogram("repro_lat_seconds", "latency", buckets=(0.5, 1.0))
+    h.observe(0.25)
+    h.observe(2.0)
+    return r
+
+
+def test_prometheus_exposition_format():
+    text = _populated_registry().render_prometheus()
+    assert "# TYPE repro_hits_total counter" in text
+    assert "# HELP repro_hits_total hits by kind" in text
+    # label values escaped: backslash-n and backslash-quote
+    assert 'repro_hits_total{kind="we\\"ird\\nlabel"} 3' in text
+    assert "# TYPE repro_depth gauge" in text
+    assert "repro_depth 7" in text
+    # histograms render cumulative buckets + sum + count, +Inf last
+    assert 'repro_lat_seconds_bucket{le="0.5"} 1' in text
+    assert 'repro_lat_seconds_bucket{le="1"} 1' in text
+    assert 'repro_lat_seconds_bucket{le="+Inf"} 2' in text
+    assert "repro_lat_seconds_sum 2.25" in text
+    assert "repro_lat_seconds_count 2" in text
+
+
+def test_snapshot_json_roundtrip_and_jsonl(tmp_path):
+    r = _populated_registry()
+    snap = r.snapshot()
+    assert json.loads(json.dumps(snap)) == snap  # pure JSON, exact
+    path = tmp_path / "m.jsonl"
+    r.write_jsonl(str(path), step=1)
+    r.write_jsonl(str(path), step=2)
+    lines = Registry.read_jsonl(str(path))
+    assert [ln["meta"]["step"] for ln in lines] == [1, 2]
+    assert lines[0]["metrics"] == snap
+
+
+# ---------------------------------------------------------------------------
+# clock + tracer
+# ---------------------------------------------------------------------------
+
+
+def test_fake_clock_deterministic():
+    clk = FakeClock(start=10.0, tick=0.5)
+    assert [clk.now(), clk.now()] == [10.0, 10.5]
+    clk.advance(4.0)
+    assert clk.now() == 15.0
+
+
+def test_tracer_chrome_trace_shape():
+    tr = Tracer(clock=FakeClock(), process_name="test-proc")
+    tr.complete("step", 1.0, 1.25, track="engine", tokens=4)
+    tr.instant("first_token", 1.1, track="req-0")
+    with tr.span("pack", track="engine"):
+        pass
+    doc = tr.to_json()
+    evs = doc["traceEvents"]
+    # metadata first: process name + one thread_name per named track
+    assert evs[0] == {"name": "process_name", "ph": "M", "pid": 1,
+                      "tid": 0, "args": {"name": "test-proc"}}
+    tracks = {e["args"]["name"] for e in evs if e["name"] == "thread_name"}
+    assert tracks == {"engine", "req-0"}
+    step = next(e for e in evs if e["name"] == "step")
+    assert step["ph"] == "X"
+    assert step["ts"] == pytest.approx(1.0e6)
+    assert step["dur"] == pytest.approx(0.25e6)
+    assert step["args"] == {"tokens": 4}
+    assert json.loads(json.dumps(doc)) == doc
+
+
+def test_tracer_capacity_bound():
+    tr = Tracer(capacity=3)
+    for i in range(5):
+        tr.complete(f"e{i}", 0.0, 1.0)
+    assert len(tr) == 3
+    assert tr.dropped == 2
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle math (explicit timestamps -> exact assertions)
+# ---------------------------------------------------------------------------
+
+
+def _req(i, prompt_len=5):
+    return SimpleNamespace(req_id=i, prompt=list(range(prompt_len)))
+
+
+def test_request_lifecycle_ttft_itl_queue():
+    reg = Registry()
+    trk = RequestTracker(reg, Tracer(clock=FakeClock()))
+    r = _req(0, prompt_len=7)
+    rec = trk.submit(r, t=0.0)
+    trk.chunk(r, t=2.0)       # admission: 2s queued
+    trk.token(r, t=3.0)       # first token
+    trk.token(r, t=4.0)       # itl 1.0
+    trk.preempt(r, t=5.0)     # back to the waiting queue
+    trk.token(r, t=9.0)       # re-admission: +4s queued; itl 5.0
+    trk.finish(r, t=10.0)
+
+    assert rec.prompt_tokens == 7
+    assert rec.ttft == pytest.approx(3.0)
+    assert rec.e2e == pytest.approx(10.0)
+    assert rec.queue_time == pytest.approx(6.0)
+    assert rec.num_tokens == 3
+    assert rec.preemptions == 1
+    assert reg.value("repro_request_events_total", event="token") == 3
+    assert reg.value("repro_request_events_total", event="preempted") == 1
+    s = trk.summary()
+    assert s["requests"] == s["finished"] == 1
+    assert s["tokens"] == 3 and s["preemptions"] == 1
+    # histograms saw the same milestones (bucketed, so bound-level checks)
+    assert reg.families()["repro_request_ttft_seconds"].get()["count"] == 1
+    assert reg.families()["repro_request_itl_seconds"].get()["count"] == 2
+
+
+def test_request_tracker_unknown_request_is_noop():
+    trk = RequestTracker(Registry())
+    trk.token(_req(99), t=1.0)  # never submitted: ignored, no crash
+    trk.finish(_req(99), t=2.0)
+    assert trk.records == {}
+
+
+# ---------------------------------------------------------------------------
+# telemetry facade: phases, launches, the latency grid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Profile:  # stand-in for engine.BatchProfile (astuple-compatible)
+    num_seqs: int = 4
+    max_context: int = 64
+    group: int = 4
+    page_size: int = 16
+    decode_share: float = 0.5
+    avg_query_len: int = 8
+    total_tokens: int = 32
+
+
+_KCFG = SimpleNamespace(variant="fused", tile=128, num_segments=1,
+                        block_q=16)
+
+
+def test_telemetry_phases_and_launch_split():
+    tel = Telemetry(clock=FakeClock(tick=0.01))
+    with tel.phase("pack", tokens=32):
+        pass
+    p, k = _Profile(), _KCFG
+    tel.record_launch("unified", p, k, 0.0, 1.0, compiled=True, tokens=32)
+    tel.record_launch("unified", p, k, 2.0, 2.1, compiled=False, tokens=32)
+    m = tel.metrics
+    assert m.value("repro_compile_events_total", kind="unified") == 1
+    fam = m.families()
+    assert fam["repro_compile_seconds"].get(kind="unified")["count"] == 1
+    assert fam["repro_launch_seconds"].get(kind="unified")["count"] == 1
+    assert fam["repro_step_phase_seconds"].get(phase="pack")["count"] == 1
+    assert fam["repro_step_phase_seconds"].get(phase="launch")["count"] == 2
+
+
+def test_sampled_launch_timing():
+    """Warm launches are only timed every Nth call; untimed launches
+    still count compiles and trace, but never feed histograms/grid."""
+    tel = Telemetry(launch_timing_interval=4)
+    assert [tel.time_this_launch() for _ in range(8)] == \
+        [False, False, False, True] * 2
+    p, k = _Profile(), _KCFG
+    tel.record_launch("unified", p, k, 0.0, 0.1, compiled=False,
+                      tokens=32, timed=False)
+    tel.record_launch("unified", p, k, 0.0, 0.1, compiled=True,
+                      tokens=32, timed=False)
+    assert tel.latency_grid()["entries"] == []
+    fam = tel.metrics.families()
+    assert fam["repro_launch_seconds"].get(kind="unified") is None
+    assert fam["repro_compile_seconds"].get(kind="unified") is None
+    # compile COUNT is exact regardless of timing sampling
+    assert tel.metrics.value("repro_compile_events_total",
+                             kind="unified") == 1
+    assert len(tel.tracer) == 2
+    assert all(not e["args"]["timed"] for e in tel.tracer.events())
+    # interval=1 (the test default elsewhere) times everything
+    always = Telemetry(launch_timing_interval=1)
+    assert all(always.time_this_launch() for _ in range(3))
+
+
+def test_latency_grid_excludes_compiles_and_aggregates():
+    tel = Telemetry()
+    tel.set_arch(num_q_heads=16, num_kv_heads=4, head_dim=64, page_size=16)
+    p, k = _Profile(), _KCFG
+    tel.record_launch("unified", p, k, 0.0, 5.0, compiled=True, tokens=32)
+    tel.record_launch("unified", p, k, 0.0, 0.2, compiled=False, tokens=32)
+    tel.record_launch("unified", p, k, 0.0, 0.4, compiled=False, tokens=32)
+    tel.record_launch("decode", None, k, 0.0, 0.1, compiled=False, tokens=4)
+    grid = tel.latency_grid()
+    assert grid["arch"]["num_q_heads"] == 16
+    [e] = grid["entries"]  # compile + profile-less launches excluded
+    assert e["phase"] == "unified"
+    assert e["count"] == 2
+    assert e["mean_s"] == pytest.approx(0.3)
+    assert e["min_s"] == pytest.approx(0.2)
+    assert e["max_s"] == pytest.approx(0.4)
+    assert e["profile"]["total_tokens"] == 32
+    assert e["config"] == {"variant": "fused", "tile": 128,
+                           "num_segments": 1, "block_q": 16}

@@ -1,0 +1,146 @@
+"""Telemetry-instrumented serving: end-to-end metric/trace consistency
+and the telemetry -> autotune refit loop.
+
+The serving suites prove scheduling features never change WHAT is
+computed; this suite proves observing the engine doesn't either, and that
+what the telemetry reports is re-derivable from engine ground truth
+(`serving_harness.assert_telemetry_consistent`).  The refit test closes
+the loop from the ISSUE: a mixed chunked trace -> latency grid ->
+`refit_from_telemetry` -> a heuristics file `heuristics.load` accepts.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import serving_harness as H
+from repro.autotune.tune import refit_from_telemetry
+from repro.core.attention import heuristics
+from repro.obs import FakeClock, Telemetry
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    return H.build_cfg_params()
+
+
+@pytest.fixture(scope="module")
+def chunked_run(smollm):
+    """One mixed chunked-prefill trace with full telemetry, shared by the
+    consistency / exposition / refit tests (compiles are the expensive
+    part; drain once)."""
+    cfg, params = smollm
+    rng = np.random.default_rng(7)
+    # interval=1: time every launch so the latency grid sees every warm
+    # launch (production default samples every 8th to keep overhead <5%)
+    tel = Telemetry(launch_timing_interval=1)
+    eng = H.build_engine(cfg, params, max_seqs=4, num_pages=96,
+                         enable_chunked_prefill=True,
+                         enable_prefix_caching=True,
+                         max_prefill_tokens=16, telemetry=tel)
+    res = H.run_requests(eng, H.make_prompts(cfg, rng, (20, 11, 26, 9, 17)),
+                         max_new_tokens=6)
+    return res
+
+
+def test_telemetry_consistent_with_engine(chunked_run):
+    H.assert_telemetry_consistent(chunked_run)
+
+
+def test_prometheus_exposition_of_serving_run(chunked_run):
+    text = chunked_run.engine.telemetry.prometheus_text()
+    # step-phase histograms for every block_until_ready-bounded region
+    for phase in ("schedule", "pack", "launch", "sample", "host"):
+        assert f'repro_step_phase_seconds_bucket{{phase="{phase}"' in text
+    # queue/pool gauges and cache/scheduler counters made it out
+    assert 'repro_queue_depth{queue="waiting"}' in text
+    assert 'repro_pool_pages{state="free"}' in text
+    assert 'repro_scheduler_events_total{event="admitted"}' in text
+    assert 'repro_cache_events_total{event="' in text
+    assert "repro_step_seconds_bucket" in text
+    assert "repro_request_ttft_seconds_count" in text
+
+
+def test_snapshot_and_summary(chunked_run, tmp_path):
+    tel = chunked_run.engine.telemetry
+    path = tmp_path / "metrics.jsonl"
+    tel.write_snapshot(str(path), arch="smollm-135m")
+    [line] = tel.metrics.read_jsonl(str(path))
+    assert line["meta"] == {"arch": "smollm-135m"}
+    assert (line["metrics"]["repro_steps_total"]["series"][0]["value"]
+            == chunked_run.num_steps)
+    s = tel.summary()
+    assert s["finished"] == len(chunked_run.requests)
+    assert s["ttft_p50"] > 0 and s["step_p50"] > 0
+    assert 0.0 <= s["padding_waste"] < 1.0
+
+
+def test_trace_export_is_perfetto_loadable(chunked_run, tmp_path):
+    path = tmp_path / "trace.json"
+    chunked_run.engine.telemetry.export_trace(str(path))
+    doc = json.load(open(path))
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+    # per-request lifecycle tracks alongside the engine step track
+    tracks = {e["args"]["name"] for e in evs if e["name"] == "thread_name"}
+    assert "engine" in tracks
+    assert any(t.startswith("req-") for t in tracks)
+    assert sum(e["name"] == "step" for e in evs) == chunked_run.num_steps
+    assert all(e["dur"] >= 0 for e in evs if e["ph"] == "X")
+
+
+def test_latency_grid_refit_and_heuristics_load(chunked_run, tmp_path):
+    tel = chunked_run.engine.telemetry
+    grid = tel.latency_grid()
+    # chunked prefill re-lands on the same token buckets, so the trace
+    # must contain warm (post-capture) unified launches
+    assert any(e["phase"] == "unified" for e in grid["entries"])
+    assert all(e["count"] >= 1 and e["mean_s"] > 0
+               for e in grid["entries"])
+    grid_path = tmp_path / "latency_grid.json"
+    tel.export_latency_grid(str(grid_path))
+
+    out_json = tmp_path / "refit.json"
+    out_py = tmp_path / "refit.py"
+    rep = refit_from_telemetry(str(grid_path), str(out_json), str(out_py))
+    st = rep["phases"]["unified"]
+    assert st["profiles"] >= 1 and st["observed_points"] >= 1
+    assert st["calibration_ratio"] > 0
+    assert rep["payload"]["unified_tree"], "refit produced no unified tree"
+
+    try:  # the exported file is a drop-in heuristics tree
+        heuristics.load(str(out_json))
+        assert heuristics.loaded_path() == str(out_json)
+    finally:
+        heuristics.reset()
+
+
+def test_telemetry_does_not_change_outputs(smollm):
+    cfg, params = smollm
+    rng = np.random.default_rng(3)
+    prompts = H.make_prompts(cfg, rng, (14, 6, 21))
+    plain = H.run_requests(H.build_engine(cfg, params), prompts,
+                           max_new_tokens=5)
+    observed = H.run_requests(
+        H.build_engine(cfg, params, telemetry=Telemetry()), prompts,
+        max_new_tokens=5)
+    H.assert_same_outputs(plain, observed, label_a="plain",
+                          label_b="telemetry")
+    H.assert_telemetry_consistent(observed)
+
+
+def test_padded_engine_telemetry(smollm):
+    """The padded per-kind step instruments too: per-kind launch/compile
+    histograms and the same cross-checked counters."""
+    cfg, params = smollm
+    rng = np.random.default_rng(5)
+    res = H.run_requests(
+        H.build_engine(cfg, params, packed_attention=False,
+                       telemetry=Telemetry(clock=FakeClock(tick=1e-4))),
+        H.make_prompts(cfg, rng, (12, 7)), max_new_tokens=4)
+    H.assert_telemetry_consistent(res)
+    snap = res.engine.telemetry.metrics.snapshot()
+    kinds = {s["labels"]["kind"] for s
+             in snap["repro_compile_events_total"]["series"]}
+    assert "decode" in kinds and any("prefill" in k for k in kinds)
