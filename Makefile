@@ -11,14 +11,16 @@ test-full:
 
 # Serving + scheduler subset: the packed/padded unified-attention and
 # chunked-prefill differential suites, prefix caching + admission
-# ordering, engine/scheduler behavior, the allocator property tests, the
-# autotune sweep/round-trip tests, and the observability suite (metrics
+# ordering, engine/scheduler behavior, fused sampling + the async
+# stream loop, the allocator property tests, the autotune
+# sweep/round-trip tests, and the observability suite (metrics
 # registry + telemetry-instrumented serving) — kernel sweeps and arch
 # matrices (-m slow) don't gate it.
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" \
 	  tests/test_unified_attention.py tests/test_chunked_prefill.py \
-	  tests/test_serving_engine.py tests/test_prefix_cache.py \
+	  tests/test_serving_engine.py tests/test_fused_sampling.py \
+	  tests/test_prefix_cache.py \
 	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py \
 	  tests/test_autotune.py tests/test_obs_metrics.py \
 	  tests/test_obs_serving.py
@@ -26,10 +28,11 @@ test-fast:
 bench:
 	PYTHONPATH=src $(PY) benchmarks/run.py
 
-# CPU-side smoke (<120s): padding-waste (packed vs padded
-# launched-token-slot and compile_events counts on a mixed trace; fails
-# if packing stops paying) + the telemetry-overhead guard (metrics
-# enabled must cost < 5% wall-clock).  Writes BENCH_e2e.json.
+# CPU-side smoke: padding-waste (packed vs padded launched-token-slot
+# and compile_events counts on a mixed trace; fails if packing stops
+# paying) + fused-sampling (one-dispatch steady step, fused == two-
+# dispatch == stream token identity) + the telemetry-overhead guard
+# (metrics enabled must cost < 5% wall-clock).  Writes BENCH_e2e.json.
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/e2e_latency.py --scenario smoke \
 	  --json-out BENCH_e2e.json

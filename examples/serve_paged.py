@@ -42,6 +42,17 @@ def main():
                     help="use the padded per-kind step (decode / prefill "
                          "/ cached-prefill executables) instead of the "
                          "default unified token-packed launch")
+    ap.add_argument("--no-fused-sampling", action="store_true",
+                    help="sample host-side from transferred logits "
+                         "(two dispatches/step) instead of in-graph "
+                         "(one fused dispatch/step; docs/serving.md)")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive via submit() + run(): async double-"
+                         "buffered loop, tokens printed as they land")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy); "
+                         "seeded per-request RNG streams make outputs "
+                         "batch-composition independent")
     ap.add_argument("--heuristics", default=None, metavar="TREE.json",
                     help="autotune-exported decision trees (from "
                          "examples/autotune_attn.py); default: run a "
@@ -97,28 +108,44 @@ def main():
                  enable_prefix_caching=args.prefix_caching,
                  enable_chunked_prefill=args.chunked_prefill,
                  max_prefill_tokens=budget,
+                 fused_sampling=not args.no_fused_sampling,
                  telemetry=tel)
     rng = np.random.default_rng(0)
     shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
     prompts = [shared + list(rng.integers(1, cfg.vocab_size,
                                           size=int(rng.integers(5, 60))))
                for _ in range(args.requests)]
-    reqs = make_requests(prompts, max_new_tokens=args.max_new_tokens)
+    reqs = make_requests(prompts, max_new_tokens=args.max_new_tokens,
+                         temperature=args.temperature)
     t0 = time.perf_counter()
-    for r in reqs:
-        eng.add_request(r)
     steps = 0
     partial_chunks = 0
-    while eng.sched.has_work:
-        stats = eng.step()
-        partial_chunks += stats["partial_prefills"]
-        if steps % 10 == 0:
-            disp = ",".join(
-                f"{ph}:{d['variant']}" for ph, d in stats["dispatch"].items())
-            print(f"step {steps:3d}: prefill={stats['prefill']} "
-                  f"decode={stats['decode']} preempted={stats['preempted']} "
-                  f"free_pages={eng.alloc.free_pages} [{disp}]")
-        steps += 1
+    if args.stream:
+        # async double-buffered drive loop: host packs step N+1 while
+        # the device runs step N (docs/serving.md)
+        for r in reqs:
+            eng.submit(r)
+
+        def on_finish(req):
+            print(f"req {req.req_id:3d}: {len(req.output)} tokens "
+                  f"(first {req.output[:4]}...)")
+
+        res = eng.run(on_finish=on_finish)
+        steps = res["steps"]
+    else:
+        for r in reqs:
+            eng.add_request(r)
+        while eng.sched.has_work:
+            stats = eng.step()
+            partial_chunks += stats["partial_prefills"]
+            if steps % 10 == 0:
+                disp = ",".join(f"{ph}:{d['variant']}"
+                                for ph, d in stats["dispatch"].items())
+                print(f"step {steps:3d}: prefill={stats['prefill']} "
+                      f"decode={stats['decode']} "
+                      f"preempted={stats['preempted']} "
+                      f"free_pages={eng.alloc.free_pages} [{disp}]")
+            steps += 1
     dt = time.perf_counter() - t0
     total = sum(len(r.output) for r in reqs)
     print(f"\n{args.requests} requests, {total} tokens in {dt:.2f}s "
@@ -131,6 +158,11 @@ def main():
     counts = ", ".join(f"{ph}/{var}={n}" for (ph, var), n
                        in sorted(eng.dispatch_counts.items()))
     print(f"kernel dispatch: {counts}")
+    calls = ", ".join(f"{k}={n}" for k, n in sorted(eng.device_calls.items()))
+    mode = ("fused in-graph sampling"
+            if not (args.no_fused_sampling or args.padded)
+            else "host-side sampling")
+    print(f"device calls: {calls} ({mode})")
     if args.chunked_prefill:
         print(f"chunked prefill: budget={budget} tokens/step, "
               f"{partial_chunks} partial chunks scheduled")

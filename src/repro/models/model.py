@@ -16,7 +16,10 @@ Entry points mirror the lowered programs:
   apply_prefill(cfg, params, cache, batch)   -> (last_logits, new_cache)
   apply_decode(cfg, params, cache, batch)    -> (logits, new_cache)
   apply_unified(cfg, params, cache, batch)   -> (last_logits, new_cache)
-                                             (token-packed decode+prefill)
+                                             (token-packed decode+prefill;
+                                             sample=True fuses last-token
+                                             gather + sampling and returns
+                                             (sampled_tokens, new_cache))
 """
 from __future__ import annotations
 
@@ -30,6 +33,7 @@ from repro.configs.base import ModelConfig
 from repro.core.paged.kv_cache import make_kv_cache_specs
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
+from repro.models import sampling
 from repro.models import ssm_blocks as S
 from repro.models.attention import attention, init_attention, kv_cache_dims
 from repro.models.moe import (
@@ -539,9 +543,13 @@ def apply_prefill_cached(cfg: ModelConfig, params, cache, batch, *,
 
 
 def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
-                  kernel_cfg=None, num_decode_seqs: int = 0):
+                  kernel_cfg=None, num_decode_seqs: int = 0,
+                  sample: bool = False, seed: int = 0,
+                  return_logits: bool = False):
     """Token-packed unified step: ONE executable for decode rows, fresh
-    prefill chunks, and resumed/cached chunks.
+    prefill chunks, and resumed/cached chunks — and, with `sample=True`,
+    for the last-token gather + sampling too, so the only thing that
+    crosses back to the host per step is [S] sampled token ids.
 
     batch: inputs [1, T] packed token ids, positions [1, T] absolute
     per-token positions (packed-position RoPE: each token rotates by its
@@ -552,9 +560,22 @@ def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
     (one row per batch slot, dead slots context_lens == 0);
     `num_decode_seqs` is static dispatch metadata like `kernel_cfg`.
 
-    Returns (per-sequence last-token logits [S, V], new_cache).
-    Attention-family models only (SSM/hybrid state is slot-indexed, not
-    page-addressable)."""
+    Fused sampling (`sample=True`) adds per-sequence sampling params to
+    the batch — temperature / top_p [S] f32, top_k / stream_ids /
+    num_generated [S] i32 — and derives each row's PRNG key in-graph from
+    (seed, stream id, tokens generated), see models.sampling.  When
+    `prev_tokens` [S] and `token_source` [1, T] are present, input rows
+    with `token_source >= 0` take their id from `prev_tokens[source]`
+    instead of `inputs` — the async double-buffered engine packs the next
+    step before the previous step's tokens reach the host, leaving the
+    just-sampled ids on device.
+
+    Returns (last_logits [S, V], new_cache) without sampling;
+    (sampled_tokens [S], new_cache) with it; and
+    (sampled_tokens, last_logits, new_cache) with `return_logits=True`
+    (the debug-logits flag — it reintroduces the [S, V] transfer, so it
+    is off in production).  Attention-family models only (SSM/hybrid
+    state is slot-indexed, not page-addressable)."""
     assert cfg.family in ("dense", "moe", "audio", "vlm") \
         and not cfg.mla.kv_lora_rank, \
         f"unified packed step unsupported for family={cfg.family!r}/MLA"
@@ -562,8 +583,13 @@ def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
                                   "query_lens", "query_start_loc",
                                   "slot_mapping")}
     meta["num_decode_seqs"] = num_decode_seqs
+    inputs = batch["inputs"]
+    if "token_source" in batch:
+        src = batch["token_source"]
+        inputs = jnp.where(src >= 0,
+                           batch["prev_tokens"][jnp.clip(src, 0)], inputs)
     logits, new_cache, _ = forward(
-        cfg, params, batch["inputs"], batch["positions"], mode="unified",
+        cfg, params, inputs, batch["positions"], mode="unified",
         cache=cache, meta=meta, backend=backend, kernel_cfg=kernel_cfg,
     )
     # per-sequence last-token rows of the packed stream ([1, T, V] ->
@@ -572,7 +598,16 @@ def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
     last = batch["query_start_loc"][:-1] + jnp.clip(
         batch["query_lens"] - 1, 0)
     last = jnp.minimum(last, logits.shape[1] - 1)
-    return logits[0, last], new_cache
+    last_logits = logits[0, last]
+    if not sample:
+        return last_logits, new_cache
+    keys = sampling.request_keys(seed, batch["stream_ids"],
+                                 batch["num_generated"])
+    toks = sampling.sample_tokens(last_logits, batch["temperature"],
+                                  batch["top_p"], batch["top_k"], keys)
+    if return_logits:
+        return toks, last_logits, new_cache
+    return toks, new_cache
 
 
 def apply_decode(cfg: ModelConfig, params, cache, batch, *, backend="xla",

@@ -1,0 +1,94 @@
+"""In-graph token sampling (greedy / temperature / top-k / top-p) with
+per-request counter-based PRNG streams.
+
+This is the sampling half of the fused packed launch
+(`models.model.apply_unified(..., sample=True)`) AND the retained
+two-dispatch `Engine._sample_fn` — one definition, so the packed, padded,
+and fused paths are bit-identical by construction (docs/serving.md).
+
+The contract:
+
+  1. **Greedy rows** (`temperature <= 0`) return `argmax(logits)`.  The
+     temperature divisor is clamped to 1.0 for them — never the historical
+     `max(t, 1e-6)`, whose x1e6 blow-up overflows/NaNs large or
+     `-inf`-masked logits on the discarded branch of the
+     `where(temperature > 0, ...)` select.
+  2. **Sampled rows** scale by temperature, then apply top-k (keep the k
+     highest logits; `k <= 0` disables), then top-p (the smallest
+     descending-probability prefix whose mass reaches p; `p >= 1`
+     disables), then draw from the renormalized survivors.  Boundary ties
+     are all kept (both filters threshold on the logit value).
+  3. **Randomness is a pure function of
+     (engine seed, request stream id, tokens generated so far)**:
+     `key = fold_in(fold_in(key(seed), stream), n_generated)`.  There is
+     no launch-wide key, so a request's drawn tokens cannot depend on
+     batch composition, slot or row placement, dead decode rows, or which
+     engine path (packed / padded / solo) executed it — the RNG
+     reproducibility guarantee the sampling-equivalence suite pins.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def request_keys(seed: int, stream_ids, num_generated):
+    """Per-row PRNG keys from the engine seed and each row's
+    (stream id, tokens-generated-so-far) counters — both int32 [S]."""
+    base = jax.random.key(seed)
+
+    def derive(stream, n):
+        return jax.random.fold_in(jax.random.fold_in(base, stream), n)
+
+    return jax.vmap(derive)(stream_ids, num_generated)
+
+
+def scaled_logits(logits, temperature):
+    """Temperature scaling with the greedy divisor clamped to 1.0:
+    `temperature <= 0` rows pass through UNCHANGED (their argmax is taken
+    later), instead of being multiplied by up to 1e6 on a dead branch."""
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    return logits.astype(jnp.float32) / safe_t[:, None]
+
+
+def apply_top_k(logits, top_k):
+    """Keep each row's `top_k` highest logits (ties at the k-th value are
+    all kept); `top_k <= 0` disables the filter for that row."""
+    v = logits.shape[-1]
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.clip(top_k[:, None] - 1, 0, v - 1), axis=-1)
+    keep = (logits >= kth) | (top_k[:, None] <= 0)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def apply_top_p(logits, top_p):
+    """Nucleus filter: keep the smallest descending-probability prefix
+    whose cumulative mass reaches `top_p` (always at least the top-1;
+    ties at the threshold logit are all kept); `top_p >= 1` disables."""
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep_sorted = (cum - probs) < top_p[:, None]
+    thresh = jnp.min(jnp.where(keep_sorted, sorted_desc, jnp.inf), axis=-1)
+    keep = (logits >= thresh[:, None]) | (top_p[:, None] >= 1.0)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def filter_logits(logits, temperature, top_p, top_k):
+    """The full pre-draw transform (scale -> top-k -> top-p), exposed so
+    the numpy-reference tests can compare kept-token sets without RNG."""
+    x = scaled_logits(logits, temperature)
+    x = apply_top_k(x, top_k)
+    return apply_top_p(x, top_p)
+
+
+def sample_tokens(logits, temperature, top_p, top_k, keys):
+    """Sample one token per row of `logits` [S, V].  Greedy rows
+    (`temperature <= 0`) take argmax of the RAW logits; sampled rows draw
+    categorically from `filter_logits` under that row's own key."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = filter_logits(logits, temperature, top_p, top_k)
+    drawn = jax.vmap(lambda key, row: jax.random.categorical(key, row))(
+        keys, x)
+    return jnp.where(temperature > 0, drawn, greedy).astype(jnp.int32)

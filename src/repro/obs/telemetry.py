@@ -75,7 +75,10 @@ class Telemetry:
         self._phase_h = m.histogram(
             "repro_step_phase_seconds",
             "Wall-clock of one step phase (schedule/pack/launch/sample/"
-            "host).", labelnames=("phase",), buckets=LATENCY_BUCKETS_S)
+            "host, plus `overlap`: host work for step N+1 done while "
+            "step N's launch was still in flight — the async "
+            "double-buffered loop).",
+            labelnames=("phase",), buckets=LATENCY_BUCKETS_S)
         self._launch_h = m.histogram(
             "repro_launch_seconds",
             "Warm (post-capture) model-launch wall-clock by executable "
@@ -217,8 +220,14 @@ class Telemetry:
         self._refs_g.set(pool["total_refs"])
 
         n_dec = len(decision.decode_reqs)
-        sampled = n_dec + sum(1 for r in decision.prefill_reqs
-                              if r.prefill_done)
+        # the engine reports tokens it actually DELIVERED: under the
+        # async double-buffered loop a scheduled row's sample may be
+        # discarded (request finished/preempted while the launch was in
+        # flight), so deriving the count from the decision over-counts
+        sampled = stats.get("sampled_tokens")
+        if sampled is None:
+            sampled = n_dec + sum(1 for r in decision.prefill_reqs
+                                  if r.prefill_done)
         self._tokens_c.inc(stats["prefill_tokens"], kind="prefill")
         self._tokens_c.inc(stats["cached_tokens"], kind="cached_prefill")
         self._tokens_c.inc(sampled, kind="sampled")

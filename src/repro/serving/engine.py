@@ -28,6 +28,31 @@ differential baseline (tests/test_unified_attention.py proves packed ==
 padded token-for-token) and the fallback for SSM/hybrid/MLA families,
 whose recurrent or latent state is not page-addressable per token.
 
+Fused packed sampling (`fused_sampling=True`, default on the packed
+path): the per-seq last-token gather AND sampling (greedy / temperature /
+top-k / top-p, per-request params, per-request PRNG streams — see
+models/sampling.py) run INSIDE the unified executable, so a steady-state
+packed step is exactly ONE device dispatch and the only device->host
+transfer is [S] sampled token ids — the full [S, V] logits never cross
+the bus (only behind `debug_logits=True`).  `fused_sampling=False` keeps
+the packed attention launch but samples in a second `_sample_fn`
+dispatch — the two-dispatch differential baseline the `fused-sampling`
+bench scenario compares against.  The padded per-kind path always
+two-dispatches.
+
+Async double-buffered serving (`submit()` / `stream()` / `run()`): the
+synchronous `step()` is retained unchanged, but the streaming loop
+overlaps host and device — step N+1 is scheduled, packed, and DISPATCHED
+before step N's sampled tokens are pulled from the device.  Decode rows
+whose input token is still in flight read it device-side
+(`prev_tokens[token_source]` inside the executable); host-side, a
+PENDING_TOKEN placeholder holds the output position so lengths, paging,
+and max_new_tokens bookkeeping stay exact, and EOS/finish processing
+simply lands one step late (a speculatively scheduled row of a request
+that finished or was preempted in flight is discarded by its
+`_spec_epoch`).  Telemetry records the host work that overlapped device
+execution as `overlap` phase spans.
+
 Static-shape discipline = the TPU analog of CUDA-graph capture (paper §6.2):
 every jitted executable is keyed by its bucket tuple; the packed path
 buckets on the pow2 total-token count alone, the padded path on
@@ -75,6 +100,7 @@ and cumulatively in `Engine.dispatch_counts`.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 import logging
 from typing import Sequence
@@ -88,13 +114,42 @@ from repro.core.attention import heuristics
 from repro.core.paged.allocator import RefCountedPageAllocator
 from repro.models import model as M
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.request import Request, State
+from repro.serving.request import PENDING_TOKEN, Request, State
 from repro.serving.scheduler import Scheduler
 from repro.utils.misc import cdiv, next_power_of_2
 
 log = logging.getLogger(__name__)
 
 _SSM_CACHE_KEYS = ("mamba", "mlstm", "slstm")  # slot-indexed (axis 1) caches
+
+
+@dataclasses.dataclass
+class _PackedLaunch:
+    """Host-side record of one unified launch: which request gets which
+    sampled row back, plus what the two-dispatch sampler needs."""
+    # (Request, packed row index, request._spec_epoch at pack time) for
+    # every row that SAMPLES — decode rows and prompt-completing chunks.
+    # The epoch lets the async loop discard rows whose request was
+    # preempted while the launch was in flight.
+    rows: list[tuple[Request, int, int]]
+    prefill_reqs: list[Request]
+    profile: heuristics.BatchProfile
+    kcfg: heuristics.KernelConfig | None
+    tokens: int  # launched token-bucket width
+    # per-row (temps, top_p, top_k, streams, num_generated) numpy arrays
+    # for the host-side `_sample_fn`; None on the fused path
+    sampling: tuple | None = None
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-not-yet-consumed engine step (the double-buffer
+    slot of the async loop)."""
+    dec: object  # scheduler decision
+    stats: dict
+    t0: float
+    pack: _PackedLaunch | None = None
+    out: object = None  # device [S] sampled ids (fused) or [S, V] logits
 
 
 class Engine:
@@ -109,6 +164,8 @@ class Engine:
         max_prefill_tokens: int | str = 8192,
         backend: str = "xla",
         packed_attention: bool = True,
+        fused_sampling: bool = True,
+        debug_logits: bool = False,
         enable_prefix_caching: bool = False,
         enable_chunked_prefill: bool = False,
         seed: int = 0,
@@ -153,6 +210,15 @@ class Engine:
             log.info("engine: packed attention unavailable for "
                      "family=%r/MLA; using the padded per-kind step",
                      cfg.family)
+        # fused sampling rides inside the unified executable, so it is a
+        # packed-path feature; elsewhere the host `_sample_fn` dispatch
+        # remains (same math — see models/sampling.py)
+        self._fused = fused_sampling and self._packed
+        self._debug_logits = debug_logits
+        if fused_sampling and not self._packed:
+            log.info("engine: fused sampling needs the packed step; "
+                     "using the two-dispatch sampler")
+        self.seed = seed
         self._group = max(1, cfg.num_q_heads // max(cfg.num_kv_heads, 1))
         self.dispatch_counts: collections.Counter = collections.Counter()
         self._last_dispatch: dict[str, dict] = {}
@@ -199,7 +265,15 @@ class Engine:
         self.cached_prefill_tokens = 0  # tokens skipped via the prefix cache
         self.launched_token_slots = 0  # token rows launched (incl. padding)
         self.compile_events: list[tuple] = []  # (kind, b, s, kcfg)/capture
-        self._key = jax.random.key(seed)
+        # device dispatches by kind ("unified" / "prefill" /
+        # "prefill_cached" / "decode" / "sample"): the fused-sampling
+        # acceptance tests assert a steady packed step adds exactly
+        # {"unified": 1}
+        self.device_calls: collections.Counter = collections.Counter()
+        self._emitted: list[tuple[int, int]] = []  # (req_id, token)/step
+        self.last_step_stats: dict | None = None
+        self.last_step_logits = None  # device [S, V], debug_logits only
+        self.last_generate: dict = {}  # drive-loop stats (see generate())
         self._compiled: dict[tuple, object] = {}
 
     # ------------------------------------------------------------------
@@ -225,11 +299,17 @@ class Engine:
                 # the whole packed step: b = seq bucket, s = token bucket;
                 # the static decode region (max_seqs rows) is part of the
                 # traced program like the KernelConfig
+                # fused-sampling flags are engine constants, baked into
+                # the traced program like num_decode_seqs — the cache key
+                # never varies with them within one engine
                 self._compiled[key] = jax.jit(
                     functools.partial(M.apply_unified, self.cfg,
                                       backend=self.backend,
                                       kernel_cfg=kcfg,
-                                      num_decode_seqs=self.max_seqs)
+                                      num_decode_seqs=self.max_seqs,
+                                      sample=self._fused,
+                                      seed=self.seed,
+                                      return_logits=self._debug_logits)
                 )
             elif kind == "prefill":
                 self._compiled[key] = jax.jit(
@@ -325,13 +405,63 @@ class Engine:
 
     @functools.cached_property
     def _sample_fn(self):
-        def sample(logits, key, temperature):
-            greedy = jnp.argmax(logits, axis=-1)
-            scaled = logits / jnp.maximum(temperature[:, None], 1e-6)
-            drawn = jax.random.categorical(key, scaled, axis=-1)
-            return jnp.where(temperature > 0, drawn, greedy).astype(jnp.int32)
+        """Host-side sampling dispatch (the padded path, and the packed
+        path with `fused_sampling=False`): the SAME per-request-stream
+        math as the fused in-graph sampler — one definition in
+        models/sampling.py — so fused and two-dispatch engines with the
+        same seed produce bit-identical tokens."""
+        seed = self.seed
+
+        def sample(logits, temperature, top_p, top_k, streams,
+                   num_generated):
+            keys = M.sampling.request_keys(seed, streams, num_generated)
+            return M.sampling.sample_tokens(
+                logits, temperature, top_p, top_k, keys)
 
         return jax.jit(sample)
+
+    def _sampling_rows(self, n: int, fill: list[tuple[int, Request]]):
+        """Per-row sampling-param arrays ([n] each) with neutral defaults
+        on dead rows (temp 0 / top_p 1 / top_k 0 / stream 0 / drawn 0)."""
+        temps = np.zeros((n,), np.float32)
+        topp = np.ones((n,), np.float32)
+        topk = np.zeros((n,), np.int32)
+        streams = np.zeros((n,), np.int32)
+        ngen = np.zeros((n,), np.int32)
+        for i, r in fill:
+            temps[i] = r.temperature
+            topp[i] = r.top_p
+            topk[i] = r.top_k
+            streams[i] = r.sampling_stream
+            # the draw counter must count IN-FLIGHT tokens too: a pending
+            # placeholder is a drawn-but-not-yet-transferred token, and
+            # this launch's draw comes after it
+            ngen[i] = r.num_generated + (1 if r._placeholder else 0)
+        return temps, topp, topk, streams, ngen
+
+    def _host_tokens(self, out, pack: _PackedLaunch) -> np.ndarray:
+        """Block on a unified launch's result and return host [S] token
+        ids: the fused path just transfers the sampled ids; the
+        two-dispatch path samples host-side from the [S, V] logits."""
+        if self._fused:
+            return np.asarray(out)
+        self.device_calls["sample"] += 1
+        temps, topp, topk, streams, ngen = pack.sampling
+        return np.asarray(self._sample_fn(
+            out, jnp.asarray(temps), jnp.asarray(topp), jnp.asarray(topk),
+            jnp.asarray(streams), jnp.asarray(ngen)))
+
+    def _emit_token(self, r: Request, tok: int) -> None:
+        """Deliver one sampled token to a request: fill its pending
+        placeholder (async) or append (sync), bump the RNG draw counter,
+        and record the (req_id, token) pair for stream()."""
+        if r._placeholder:
+            r.output[-1] = tok
+            r._placeholder = False
+        else:
+            r.output.append(tok)
+        r.num_generated += 1
+        self._emitted.append((r.req_id, tok))
 
     # ------------------------------------------------------------------
     # request API
@@ -350,15 +480,97 @@ class Engine:
         while self.sched.has_work and steps < max_steps:
             self.step()
             steps += 1
+        self._note_drive_end("generate", steps, max_steps)
         return list(requests)
+
+    def _note_drive_end(self, api: str, steps: int, max_steps: int) -> None:
+        """Close out a drive loop: record its stats in
+        `Engine.last_generate` and WARN if the step budget ran out with
+        requests still unfinished — callers must not mistake truncated
+        outputs for normal completion."""
+        unfinished = len(self.sched.waiting) + len(self.sched.running)
+        exhausted = unfinished > 0 and steps >= max_steps
+        self.last_generate = {"steps": steps, "unfinished": unfinished,
+                              "exhausted": exhausted}
+        if exhausted:
+            log.warning(
+                "%s: max_steps=%d exhausted with %d request(s) not "
+                "FINISHED — their outputs are truncated; raise max_steps "
+                "or check Engine.last_generate", api, max_steps, unfinished)
+
+    def submit(self, req: Request) -> int:
+        """Queue a request for the streaming loop; returns the req_id
+        that `stream()` tags its emitted tokens with."""
+        self.add_request(req)
+        return req.req_id
+
+    def stream(self, *, max_steps: int = 10_000):
+        """Drive the engine until the queue drains, yielding
+        (req_id, token) pairs in emission order.
+
+        On the packed path with fused sampling the loop is DOUBLE
+        BUFFERED: each iteration schedules, packs, and DISPATCHES step
+        N+1 before blocking on step N's sampled tokens, so host-side
+        batch construction overlaps device execution (`overlap` phase
+        spans in telemetry).  Other paths step synchronously — same
+        yields, no overlap."""
+        steps = 0
+        if not self._fused:
+            while self.sched.has_work and steps < max_steps:
+                self.step()
+                steps += 1
+                yield from self._emitted
+            self._note_drive_end("stream", steps, max_steps)
+            return
+        inflight: _Inflight | None = None
+        while inflight is not None or \
+                (self.sched.has_work and steps < max_steps):
+            nxt = None
+            if self.sched.has_work and \
+                    steps + (1 if inflight is not None else 0) < max_steps:
+                nxt = self._begin_step(inflight)
+            if inflight is not None:
+                self._finish_step(inflight)
+                steps += 1
+                yield from self._emitted
+            inflight = nxt
+        self._note_drive_end("stream", steps, max_steps)
+
+    def run(self, *, max_steps: int = 10_000, on_token=None,
+            on_finish=None) -> dict:
+        """Always-on drive loop over `stream()`: consumes everything
+        `submit()`ed (admissions during the loop included), invoking
+        `on_token(req_id, token)` per sampled token and
+        `on_finish(request)` as requests leave the batch.  Returns
+        {"outputs": {req_id: [token, ...]}} merged with the
+        `last_generate` drive stats."""
+        outputs: dict[int, list[int]] = {}
+        prev_cb = self.sched.on_finish
+        if on_finish is not None:
+            def chained(req):
+                if prev_cb is not None:
+                    prev_cb(req)
+                on_finish(req)
+            self.sched.on_finish = chained
+        try:
+            for rid, tok in self.stream(max_steps=max_steps):
+                outputs.setdefault(rid, []).append(tok)
+                if on_token is not None:
+                    on_token(rid, tok)
+        finally:
+            self.sched.on_finish = prev_cb
+        return {"outputs": outputs, **self.last_generate}
 
     # ------------------------------------------------------------------
     # one engine step
     # ------------------------------------------------------------------
 
-    def step(self) -> dict:
+    def _schedule_and_pack(self, t_step: float, prev_rows=None,
+                           prev_out=None) -> _Inflight:
+        """The front half of a step, shared by the synchronous `step()`
+        and the async `_begin_step()`: schedule, account, update page
+        tables, pack, and DISPATCH — no blocking on device results."""
         tel = self.telemetry
-        t_step = tel.clock.now() if tel else 0.0
         self._last_dispatch = {}
         dec = self.sched.step(self.step_idx)
         if tel:
@@ -391,27 +603,45 @@ class Engine:
             row = self.page_table[req.slot]
             row[: len(req.pages)] = req.pages
 
-        if self._packed:
-            if dec.decode_reqs or dec.prefill_reqs:
-                self._run_unified(dec.decode_reqs, dec.prefill_reqs)
-        else:
-            if dec.prefill_reqs:
-                self._run_prefill(dec.prefill_reqs)
-            if dec.decode_reqs:
-                self._run_decode(dec.decode_reqs)
+        flight = _Inflight(dec=dec, stats=stats, t0=t_step)
+        if self._packed and (dec.decode_reqs or dec.prefill_reqs):
+            batch, pack = self._pack_unified(
+                dec.decode_reqs, dec.prefill_reqs,
+                prev_rows=prev_rows, prev_out=prev_out)
+            flight.out = self._launch_unified(batch, pack)
+            flight.pack = pack
         if dec.prefill_reqs and self.prefix_cache is not None:
             for r in dec.prefill_reqs:
                 # index the now-written full pages (up to this chunk's
                 # end) so concurrent shared-prefix requests can reuse
                 # them immediately — even mid-chunked-prefill; the
                 # cursor keeps the chained hashing O(prompt) overall
+                # (context_len is set at pack time, so this is safe to do
+                # while the launch is still in flight)
                 r.cache_cursor = self.prefix_cache.insert_incremental(
                     r.prompt, r.pages, r.context_len, r.cache_cursor)
         stats["dispatch"] = dict(self._last_dispatch)
+        return flight
 
+    def _finish_step(self, flight: _Inflight) -> dict:
+        """The back half of a step: block on the launch's sampled tokens,
+        fold them into request state, process finishes, close out stats
+        and telemetry."""
+        tel = self.telemetry
+        self._emitted = []
+        stats = flight.stats
+        if flight.pack is not None:
+            t_sample = tel.clock.now() if tel else 0.0
+            toks = self._host_tokens(flight.out, flight.pack)
+            if tel:
+                tel.record_phase("sample", t_sample, tel.clock.now())
+            self._consume_unified(flight.pack, toks)
         t_host = tel.clock.now() if tel else 0.0
         for req in list(self.sched.running):
-            if req.prefill_done and req.done:
+            # a request whose LAST token is still in flight (unfilled
+            # placeholder) must not finish yet — it finishes next step,
+            # once the token lands
+            if req.prefill_done and req.done and not req._placeholder:
                 slot = req.slot  # finish() releases the slot
                 self.sched.finish(req)
                 if slot is not None:
@@ -419,23 +649,89 @@ class Engine:
         # pool occupancy AFTER finishes released their pages, so the
         # snapshot matches the harness's pages-conserved invariant
         stats["pool"] = self.alloc.stats()
+        stats["sampled_tokens"] = len(self._emitted)
         if tel:
             t_end = tel.clock.now()
             tel.record_phase("host", t_host, t_end)
-            tel.record_step(t0=t_step, t1=t_end, decision=dec,
+            tel.record_step(t0=flight.t0, t1=t_end, decision=flight.dec,
                             stats=stats, engine=self)
         self.step_idx += 1
+        self.last_step_stats = stats
         return stats
+
+    def step(self) -> dict:
+        tel = self.telemetry
+        t_step = tel.clock.now() if tel else 0.0
+        if self._packed:
+            flight = self._schedule_and_pack(t_step)
+            return self._finish_step(flight)
+        # padded per-kind path: run, then reuse the same back half (its
+        # launches already consumed their results inline)
+        flight = self._schedule_and_pack(t_step)
+        self._emitted = []
+        dec = flight.dec
+        if dec.prefill_reqs:
+            self._run_prefill(dec.prefill_reqs)
+        if dec.decode_reqs:
+            self._run_decode(dec.decode_reqs)
+        return self._finish_padded(flight)
+
+    def _finish_padded(self, flight: _Inflight) -> dict:
+        """Padded-path step epilogue: finishes + stats (tokens were
+        already emitted inside the per-kind runners)."""
+        tel = self.telemetry
+        stats = flight.stats
+        t_host = tel.clock.now() if tel else 0.0
+        for req in list(self.sched.running):
+            if req.prefill_done and req.done and not req._placeholder:
+                slot = req.slot
+                self.sched.finish(req)
+                if slot is not None:
+                    self.page_table[slot] = 0
+        stats["pool"] = self.alloc.stats()
+        stats["sampled_tokens"] = len(self._emitted)
+        if tel:
+            t_end = tel.clock.now()
+            tel.record_phase("host", t_host, t_end)
+            tel.record_step(t0=flight.t0, t1=t_end, decision=flight.dec,
+                            stats=stats, engine=self)
+        self.step_idx += 1
+        self.last_step_stats = stats
+        return stats
+
+    def _begin_step(self, prev: _Inflight | None) -> _Inflight:
+        """Schedule + pack + dispatch step N+1 while step N (`prev`) is
+        still executing on device.  Decode rows whose input token is in
+        `prev`'s launch read it device-side via prev_tokens/token_source;
+        host-side each such request gets a PENDING_TOKEN placeholder so
+        every length / paging / max_new_tokens computation sees post-step
+        state."""
+        tel = self.telemetry
+        t0 = tel.clock.now() if tel else 0.0
+        prev_rows: dict[int, int] = {}
+        if prev is not None and prev.pack is not None:
+            for r, row, epoch in prev.pack.rows:
+                if r._spec_epoch != epoch or \
+                        r.state not in (State.RUNNING, State.PREFILLING):
+                    continue
+                prev_rows[r.req_id] = row
+                if not r._placeholder:
+                    r.output.append(PENDING_TOKEN)
+                    r._placeholder = True
+        flight = self._schedule_and_pack(
+            t0, prev_rows=prev_rows,
+            prev_out=prev.out if prev is not None else None)
+        if tel and prev is not None and prev.pack is not None:
+            # the host work above (schedule/pack/dispatch) ran while the
+            # previous launch was still in flight
+            tel.record_phase("overlap", t0, tel.clock.now())
+        return flight
 
     def _positions(self, pos: np.ndarray) -> jnp.ndarray:
         p = jnp.asarray(pos, jnp.int32)
         if self.cfg.rope_style == "mrope":
             p = jnp.broadcast_to(p[None], (3,) + p.shape)
         return p
-
-    def _next_key(self):
-        self._key, k = jax.random.split(self._key)
-        return k
 
     def _page_slots(self, row: np.ndarray, positions: np.ndarray) \
             -> np.ndarray:
@@ -444,9 +740,11 @@ class Engine:
         ps = self.cfg.page_size
         return row[positions // ps] * ps + positions % ps
 
-    def _run_unified(self, decode_reqs: list[Request],
-                     prefill_reqs: list[Request]) -> None:
-        """Execute the whole step as ONE token-packed launch.
+    def _pack_unified(self, decode_reqs: list[Request],
+                      prefill_reqs: list[Request],
+                      prev_rows: dict[int, int] | None = None,
+                      prev_out=None) -> tuple[dict, _PackedLaunch]:
+        """Build the batch for ONE token-packed launch (no dispatch).
 
         Layout: rows [0, max_seqs) are the static decode region — sequence
         i IS batch slot i, one token row each, dead slots masked by
@@ -459,7 +757,18 @@ class Engine:
         rows are dead, qlen = ctx = 0) and the page table full-width, so
         executables bucket ONLY on the token count — no per-chunk-count
         or per-context-depth fragmentation.  Only decode rows and
-        prompt-completing chunks sample."""
+        prompt-completing chunks sample.
+
+        `prev_rows` (async loop) maps req_id -> row in the STILL IN
+        FLIGHT previous launch whose sampled token is this request's
+        decode input: the packed batch routes it device-side through
+        `prev_tokens` (= `prev_out`, the previous launch's [S] output)
+        and `token_source`, so the host never waits for it.
+
+        Each request's `context_len` advances HERE (the KV its launch
+        will write is determined at pack time) — consumers downstream of
+        dispatch, like incremental prefix-cache indexing, see the
+        post-step value without blocking on the device."""
         tel = self.telemetry
         t_pack = tel.clock.now() if tel else 0.0
         ms = self.max_seqs
@@ -479,21 +788,30 @@ class Engine:
         qlens = np.zeros((s,), np.int32)
         ctx = np.zeros((s,), np.int32)
         pt = np.zeros((s, np_b), np.int32)
-        temps = np.zeros((s,), np.float32)
+        src = np.full((1, t), -1, np.int32)
         qsl = np.full((s + 1,), ms, np.int32)
         qsl[:ms + 1] = np.arange(ms + 1)
         qlens[:ms] = 1  # every decode row is a 1-token segment (dead rows
         #                 are masked by ctx == 0, not by qlen)
+        rows: list[tuple[Request, int, int]] = []
         for r in decode_reqs:
             i = r.slot
-            tokens[0, i] = r.output[-1] if r.output else r.prompt[-1]
+            if prev_rows and r.req_id in prev_rows:
+                # input token still in flight: read it device-side from
+                # the previous launch's output (host copy is the PENDING
+                # placeholder)
+                src[0, i] = prev_rows[r.req_id]
+            else:
+                assert not r._placeholder, "decode input still in flight"
+                tokens[0, i] = r.output[-1] if r.output else r.prompt[-1]
             p = r.total_len - 1
             pos[0, i] = p
             ctx[i] = r.total_len
             row = self.page_table[i]
             pt[i] = row[:np_b]
             slots[0, i] = self._page_slots(row, np.asarray(p))
-            temps[i] = r.temperature
+            rows.append((r, i, r._spec_epoch))
+            r.context_len = r.total_len
         cur = ms
         for j, r in enumerate(prefill_reqs):
             i = ms + j
@@ -507,14 +825,16 @@ class Engine:
             row = self.page_table[r.slot]
             pt[i] = row[:np_b]
             slots[0, cur: cur + n] = self._page_slots(row, p)
-            temps[i] = r.temperature
+            if r.chunk_start + n == r.num_prompt_tokens:
+                rows.append((r, i, r._spec_epoch))  # completing: samples
+            r.context_len = r.chunk_start + n
             cur += n
             qsl[i + 1:] = cur
 
         profile = self._unified_profile(decode_reqs, prefill_reqs)
         kcfg = self._dispatch("unified", profile)
-        pre_captures = len(self.compile_events)
-        fn = self._get_fn("unified", s, t, kcfg)
+        pack = _PackedLaunch(rows=rows, prefill_reqs=list(prefill_reqs),
+                             profile=profile, kcfg=kcfg, tokens=t)
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),
@@ -524,40 +844,67 @@ class Engine:
             "query_start_loc": jnp.asarray(qsl),
             "slot_mapping": jnp.asarray(slots),
         }
+        fill = [(i, r) for r, i, _ in rows]
+        if self._fused:
+            temps, topp, topk, streams, ngen = self._sampling_rows(s, fill)
+            batch["temperature"] = jnp.asarray(temps)
+            batch["top_p"] = jnp.asarray(topp)
+            batch["top_k"] = jnp.asarray(topk)
+            batch["stream_ids"] = jnp.asarray(streams)
+            batch["num_generated"] = jnp.asarray(ngen)
+            batch["token_source"] = jnp.asarray(src)
+            batch["prev_tokens"] = (prev_out if prev_out is not None
+                                    else jnp.zeros((s,), jnp.int32))
+        else:
+            pack.sampling = self._sampling_rows(s, fill)
         if tel:
-            t_launch = tel.clock.now()
-            tel.record_phase("pack", t_pack, t_launch, tokens=t)
-        logits, new_cache = fn(self.params, self.cache, batch)
+            tel.record_phase("pack", t_pack, tel.clock.now(), tokens=t)
+        return batch, pack
+
+    def _launch_unified(self, batch: dict, pack: _PackedLaunch):
+        """Dispatch one packed launch; returns the device-side result
+        ([S] sampled ids fused, [S, V] last logits otherwise) WITHOUT
+        transferring it to the host."""
+        tel = self.telemetry
+        pre_captures = len(self.compile_events)
+        fn = self._get_fn("unified", 2 * self.max_seqs, pack.tokens,
+                          pack.kcfg)
+        self.device_calls["unified"] += 1
+        t_launch = tel.clock.now() if tel else 0.0
+        ret = fn(self.params, self.cache, batch)
+        if self._fused and self._debug_logits:
+            out, self.last_step_logits, new_cache = ret
+        else:
+            out, new_cache = ret
         if tel:
             compiled = len(self.compile_events) > pre_captures
             timed = compiled or tel.time_this_launch()
             if timed:
-                jax.block_until_ready(logits)
+                jax.block_until_ready(out)
             tel.record_launch(
-                "unified", profile, kcfg, t_launch, tel.clock.now(),
-                compiled=compiled, tokens=t, timed=timed)
+                "unified", pack.profile, pack.kcfg, t_launch,
+                tel.clock.now(), compiled=compiled, tokens=pack.tokens,
+                grid_phase="unified", timed=timed)
         self.cache = new_cache
-        self.launched_token_slots += t
-        t_sample = tel.clock.now() if tel else 0.0
-        toks = np.asarray(self._sample_fn(
-            logits, self._next_key(), jnp.asarray(temps)))
-        if tel:
-            tel.record_phase("sample", t_sample, tel.clock.now())
-        for r in decode_reqs:
-            r.output.append(int(toks[r.slot]))
-            r.context_len = r.total_len - 1
+        self.launched_token_slots += pack.tokens
+        return out
+
+    def _consume_unified(self, pack: _PackedLaunch,
+                         toks: np.ndarray) -> None:
+        """Fold one launch's sampled tokens back into request state.
+        Rows whose request finished or was preempted while the launch was
+        in flight (async loop) are discarded by state / epoch."""
+        tel = self.telemetry
+        for r, row, epoch in pack.rows:
+            if r.state is State.FINISHED or r._spec_epoch != epoch:
+                continue
+            self._emit_token(r, int(toks[row]))
             if tel:
                 tel.requests.token(r)
-        for j, r in enumerate(prefill_reqs):
-            done = (r.chunk_start + r.num_scheduled_tokens
-                    == r.num_prompt_tokens)
-            if done:
-                r.output.append(int(toks[ms + j]))
-            r.context_len = r.chunk_start + r.num_scheduled_tokens
-            if tel:
-                tel.requests.chunk(r)
-                if done:
-                    tel.requests.token(r)
+        if tel:
+            for r in pack.prefill_reqs:
+                if r.state in (State.PREFILLING, State.RUNNING):
+                    tel.requests.chunk(r)
 
     def _run_prefill(self, reqs: list[Request]) -> None:
         """Execute one scheduled chunk per request.  Chunks starting at
@@ -581,13 +928,15 @@ class Engine:
                 == r.num_prompt_tokens]
         if done:
             t_sample = tel.clock.now() if tel else 0.0
-            temps = np.zeros((logits.shape[0],), np.float32)
-            for i, r in done:
-                temps[i] = r.temperature
+            temps, topp, topk, streams, ngen = self._sampling_rows(
+                logits.shape[0], done)
+            self.device_calls["sample"] += 1
             toks = np.asarray(self._sample_fn(
-                logits, self._next_key(), jnp.asarray(temps)))
+                logits, jnp.asarray(temps), jnp.asarray(topp),
+                jnp.asarray(topk), jnp.asarray(streams),
+                jnp.asarray(ngen)))
             for i, r in done:
-                r.output.append(int(toks[i]))
+                self._emit_token(r, int(toks[i]))
             if tel:
                 tel.record_phase("sample", t_sample, tel.clock.now())
         for r in reqs:
@@ -620,6 +969,7 @@ class Engine:
         kcfg = self._dispatch("prefill", profile)
         pre_captures = len(self.compile_events)
         fn = self._get_fn("prefill", b, s, kcfg)
+        self.device_calls["prefill"] += 1
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),
@@ -679,6 +1029,7 @@ class Engine:
         kcfg = self._dispatch("prefill_cached", profile)
         pre_captures = len(self.compile_events)
         fn = self._get_fn(f"prefill_cached/np{np_b}", b, s, kcfg)
+        self.device_calls["prefill_cached"] += 1
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),
@@ -710,16 +1061,17 @@ class Engine:
         tokens = np.zeros((b, 1), np.int32)
         pos = np.full((b, 1), -1, np.int32)
         ctx = np.zeros((b,), np.int32)
-        temps = np.zeros((b,), np.float32)
         for r in reqs:
             tokens[r.slot, 0] = r.output[-1] if r.output else r.prompt[-1]
             pos[r.slot, 0] = r.total_len - 1
             ctx[r.slot] = r.total_len
-            temps[r.slot] = r.temperature
+        temps, topp, topk, streams, ngen = self._sampling_rows(
+            b, [(r.slot, r) for r in reqs])
         profile = self._decode_profile(reqs)
         kcfg = self._dispatch("decode", profile)
         pre_captures = len(self.compile_events)
         fn = self._get_fn("decode", b, 1, kcfg)
+        self.device_calls["decode"] += 1
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),
@@ -741,14 +1093,15 @@ class Engine:
         self.cache = new_cache
         self.launched_token_slots += b
         t_sample = tel.clock.now() if tel else 0.0
-        toks = np.asarray(
-            self._sample_fn(logits, self._next_key(), jnp.asarray(temps))
-        )
+        self.device_calls["sample"] += 1
+        toks = np.asarray(self._sample_fn(
+            logits, jnp.asarray(temps), jnp.asarray(topp),
+            jnp.asarray(topk), jnp.asarray(streams), jnp.asarray(ngen)))
         if tel:
             tel.record_phase("sample", t_sample, tel.clock.now())
         for r in reqs:
-            r.output.append(int(toks[r.slot]))
-            r.context_len = r.total_len - 1
+            r.context_len = r.total_len
+            self._emit_token(r, int(toks[r.slot]))
             if tel:
                 tel.requests.token(r)
 

@@ -17,12 +17,24 @@ class State(enum.Enum):
     FINISHED = "finished"
 
 
+PENDING_TOKEN = -1  # placeholder for an in-flight (not yet transferred)
+#                     sampled token in the async double-buffered loop
+
+
 @dataclasses.dataclass
 class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     eos_token: int | None = None
     temperature: float = 0.0  # 0 = greedy
+    top_p: float = 1.0  # nucleus mass; 1.0 disables
+    top_k: int = 0  # keep the k highest logits; 0 disables
+    # sampling-stream id: the RNG stream is a pure function of
+    # (engine seed, stream id, tokens generated), so two runs that pin the
+    # same seed get bit-identical samples regardless of batch composition,
+    # slot placement, or engine path.  None -> the req_id (fresh ids per
+    # process, so cross-run reproducibility requires pinning).
+    seed: int | None = None
     req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     state: State = State.WAITING
     output: list[int] = dataclasses.field(default_factory=list)
@@ -41,6 +53,31 @@ class Request:
     # index each written full page once across a chunked prefill
     cache_cursor: tuple | None = None
     arrival_step: int = 0
+    # total tokens this request has sampled AND kept, across preemptions
+    # (preemption folds output into prompt but does NOT reset this): the
+    # per-token RNG counter, so a regenerated-after-preemption token draws
+    # from the same stream position and reproducibility survives eviction
+    num_generated: int = 0
+    # async double-buffered loop bookkeeping (engine-owned): is the last
+    # output element an un-transferred PENDING_TOKEN placeholder, and
+    # which speculative-scheduling epoch do in-flight rows belong to
+    # (preemption bumps the epoch so stale in-flight tokens are discarded)
+    _placeholder: bool = False
+    _spec_epoch: int = 0
+
+    def discard_speculative(self) -> None:
+        """Invalidate in-flight sampled tokens (called on preemption):
+        drop the un-filled placeholder, if any, and bump the epoch so the
+        engine discards this request's rows from in-flight launches."""
+        self._spec_epoch += 1
+        if self._placeholder:
+            self.output.pop()
+            self._placeholder = False
+
+    @property
+    def sampling_stream(self) -> int:
+        """The RNG stream id this request samples from (see `seed`)."""
+        return self.seed if self.seed is not None else self.req_id
 
     @property
     def num_prompt_tokens(self) -> int:

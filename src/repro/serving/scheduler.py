@@ -94,6 +94,11 @@ class Scheduler:
         self.telemetry = telemetry  # obs.Telemetry | None
         self.waiting: list[Request] = []
         self.running: list[Request] = []
+        # streaming finish callback: invoked with each request the moment
+        # it leaves the batch FINISHED (normal finish or admission-time
+        # rejection) — the engine's submit()/stream() API hangs its
+        # per-request completion events off this
+        self.on_finish = None
         self._free_slots = list(range(max_seqs - 1, -1, -1))
         # per-step memo of _order_waiting's match results, reused by the
         # admit loop: (evictions watermark, {req_id: matched pages})
@@ -139,6 +144,8 @@ class Scheduler:
         if self.telemetry is not None:
             self.telemetry.scheduler_event("finished")
             self.telemetry.requests.finish(req)
+        if self.on_finish is not None:
+            self.on_finish(req)
 
     def _preempt(self, req: Request) -> None:
         """Evict `req` from the batch back to the head of the wait queue.
@@ -147,6 +154,12 @@ class Scheduler:
         recomputing it.  Works mid-prefill: only `context_len` tokens (the
         executed chunks) have KV, and only those are donated."""
         req.state = State.PREEMPTED
+        # async loop: drop the in-flight placeholder token (its value
+        # never reached the host) and bump the speculative epoch so the
+        # engine discards this request's rows from in-flight launches.
+        # num_generated is NOT reset: the regenerated token reuses the
+        # same RNG stream position, so sampling survives eviction.
+        req.discard_speculative()
         self._free_request(req)  # donates written pages while the
         req.prompt = req.prompt + req.output  # token ids still
         req.output = []                       # match the layout
@@ -238,6 +251,13 @@ class Scheduler:
         for req in list(self.running):
             if req.state is not State.RUNNING:
                 continue  # PREFILLING: chunk continuation happens in pass 2
+            if req.done:
+                # only reachable in the async double-buffered loop: the
+                # request's last token is still in flight (a placeholder
+                # holds its output position) but max_new_tokens is already
+                # reached, so it will finish as soon as the token lands —
+                # scheduling a speculative decode for it would be wasted
+                continue
             need = self.alloc.pages_to_cover(len(req.pages), req.total_len + 1)
             while need > self.alloc.free_pages:
                 victim = self._preempt_one()
@@ -299,6 +319,8 @@ class Scheduler:
                 if self.telemetry is not None:
                     self.telemetry.scheduler_event("rejected")
                     self.telemetry.requests.finish(req)
+                if self.on_finish is not None:
+                    self.on_finish(req)
                 continue
             cached_pages = self._memoized_match(req)
             num_cached = len(cached_pages) * self.alloc.page_size
@@ -340,9 +362,12 @@ class Scheduler:
         # --- liveness backstop --------------------------------------------
         # Every resident request is a stalled chunked prefill (they jointly
         # exhausted the pool, so none can grow and nothing decodes): evict
-        # the youngest so the oldest makes progress next step.  Unreachable
-        # without chunking — RUNNING requests always decode.
-        if not decode_reqs and not prefill_reqs and self.running:
+        # the youngest so the oldest makes progress next step.  Requests
+        # that are done except for an in-flight final token (the async
+        # loop's done-skip above) are NOT stalled — they finish as soon as
+        # the token lands, so they must not trip the backstop.
+        if not decode_reqs and not prefill_reqs and any(
+                not (r.prefill_done and r.done) for r in self.running):
             victim = self._preempt_one()
             if victim is not None:
                 preempted.append(victim)
