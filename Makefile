@@ -1,7 +1,7 @@
 # Tier-1 verification (ROADMAP.md): the whole suite, fail-fast.
 PY ?= python
 
-.PHONY: test test-full test-fast bench bench-smoke tune deps-dev
+.PHONY: test test-full test-fast test-mesh bench bench-smoke tune deps-dev
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -24,6 +24,15 @@ test-fast:
 	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py \
 	  tests/test_autotune.py tests/test_obs_metrics.py \
 	  tests/test_obs_serving.py
+
+# Multi-device (mesh executor) suites on forced CPU host devices: the
+# tp={1,2,4} packed-serving differential, KV head-split shard specs,
+# ShardingError paths, and the distributed dryrun tests.  The mesh
+# children force their own device counts; the flag here covers the
+# in-process cases too.
+test-mesh:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" PYTHONPATH=src \
+	  $(PY) -m pytest -q tests/test_mesh_serving.py tests/test_distributed.py
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/run.py

@@ -256,6 +256,109 @@ def run_fused_sampling(emit, cfg=None, params=None):
     return results
 
 
+def run_tp_scaling(emit):
+    """`tp-scaling` scenario: the mesh executor's scaling contract.  A
+    child process (this file, `--scenario _tp-child`) is re-exec'd with
+    four forced CPU host devices and drives the SAME mixed
+    chunked+cached+preemption trace through engines at tp=1, tp=2 and
+    tp=4.  Records device dispatches per step and padding waste per tp;
+    the guards are structural, not wall-clock: every tp must keep the
+    steady step at exactly 1.0 dispatches/step (a shard_map-wrapped jit
+    is still one launch) and produce token-for-token identical outputs
+    (head-parallel qkv + tiled all_gather splits no contraction, so
+    per-device math is bitwise the single-device math)."""
+    import json
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    # force 4 host devices in the child only; strip any pre-existing
+    # device-count flag so `make test-mesh`-style environments compose
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "host_platform_device_count" not in f]
+    env["XLA_FLAGS"] = " ".join(
+        flags + ["--xla_force_host_platform_device_count=4"])
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                 if p and p != src])
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__),
+         "--scenario", "_tp-child"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"tp-scaling child failed (rc={proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith("TPCHILD:"))
+    res = json.loads(line[len("TPCHILD:"):])
+    for tp in sorted(res, key=int):
+        r = res[tp]
+        emit(f"tp_scaling/dispatches_per_step/tp{tp}",
+             r["dispatches_per_step"],
+             f"total device dispatches / {r['steps']} steps "
+             f"(guard: exactly 1.0 — shard_map jit is one launch)")
+        emit(f"tp_scaling/waste_pct/tp{tp}", r["waste_pct"],
+             f"launched slots that were padding "
+             f"({r['slots']} slots, {r['useful']} useful)")
+        emit(f"tp_scaling/steps/tp{tp}", r["steps"],
+             "drain steps over the mixed trace (identical across tp)")
+        emit(f"tp_scaling/wall_s/tp{tp}", r["wall"],
+             f"drain wall-clock on {r['num_devices']} forced CPU host "
+             f"device(s) — structural scenario, not a speed claim")
+    return res
+
+
+def run_tp_child():
+    """Child half of `tp-scaling` (hidden `_tp-child` scenario): runs
+    under XLA_FLAGS=--xla_force_host_platform_device_count=4 and prints
+    one TPCHILD: JSON line for the parent to parse."""
+    import json
+
+    # reduced smollm has 2 q / 1 kv heads — not tp=4 divisible; override
+    # to an 8q/4kv geometry (same d_model/head_dim) like test_mesh_serving
+    cfg = reduced(ARCHS["smollm-135m"]).replace(
+        dtype="float32", num_q_heads=8, num_kv_heads=4)
+    params = M.init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(3)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (58, 50)]
+    out = {}
+    for tp in (1, 2, 4):
+        eng = Engine(cfg, params, max_seqs=2, num_pages=8,
+                     max_model_len=128, enable_chunked_prefill=True,
+                     enable_prefix_caching=True, max_prefill_tokens=16,
+                     tp=tp)
+        reqs = make_requests([list(p) for p in prompts], max_new_tokens=8)
+        for r in reqs:
+            eng.add_request(r)
+        preempted = 0
+        t0 = time.perf_counter()
+        steps = 0
+        while eng.sched.has_work:
+            preempted += eng.step()["preempted"]
+            steps += 1
+        wall = time.perf_counter() - t0
+        useful = eng.prefilled_tokens + sum(len(r.output) for r in reqs)
+        out[str(tp)] = {
+            "steps": steps,
+            "dispatches_per_step": sum(eng.device_calls.values()) / steps,
+            "device_calls": {k: int(v)
+                             for k, v in eng.device_calls.items()},
+            "slots": eng.launched_token_slots,
+            "useful": useful,
+            "waste_pct": 100.0 * (eng.launched_token_slots - useful)
+            / eng.launched_token_slots,
+            "preempted": preempted,
+            "wall": wall,
+            "num_devices": eng.alloc.mesh_stats(tp)["num_devices"],
+            "outputs": [[int(t) for t in r.output] for r in reqs],
+        }
+    print("TPCHILD:" + json.dumps(out))
+
+
 def run(emit):
     cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
     params = M.init(cfg, jax.random.key(0))
@@ -445,10 +548,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="smoke",
                     choices=["smoke", "padding-waste", "fused-sampling",
-                             "telemetry-overhead", "all"])
+                             "telemetry-overhead", "tp-scaling",
+                             "_tp-child", "all"])
     ap.add_argument("--json-out", default="BENCH_e2e.json", metavar="PATH",
                     help="machine-readable results ('' disables)")
     args = ap.parse_args()
+    if args.scenario == "_tp-child":
+        # hidden: the forced-4-device half of tp-scaling (no CSV/JSON)
+        run_tp_child()
+        raise SystemExit(0)
     print("name,value,derived")
     rows: dict[str, dict] = {}
 
@@ -484,6 +592,20 @@ if __name__ == "__main__":
             "fused sample/host phase regressed: "
             f"{fs['fused']['sample_s']:.4f}s vs "
             f"{fs['two_dispatch']['sample_s']:.4f}s two-dispatch")
+    if args.scenario in ("tp-scaling", "all"):
+        # deliberately not in smoke: spawns a 4-device child process
+        tp_res = run_tp_scaling(_emit)
+        for tp, r in sorted(tp_res.items(), key=lambda kv: int(kv[0])):
+            assert r["dispatches_per_step"] == 1.0, (
+                f"tp={tp} broke the one-dispatch steady step: "
+                f"{r['device_calls']} over {r['steps']} steps")
+            assert r["outputs"] == tp_res["1"]["outputs"], (
+                f"tp={tp} outputs diverged from tp=1 on the mixed trace")
+            assert r["steps"] == tp_res["1"]["steps"], (
+                f"tp={tp} took {r['steps']} steps vs "
+                f"{tp_res['1']['steps']} at tp=1")
+        assert tp_res["1"]["preempted"] > 0, \
+            "tp-scaling trace no longer exercises preemption"
     if args.scenario in ("smoke", "telemetry-overhead", "all"):
         tel_res = run_telemetry_overhead(_emit)
         assert tel_res["overhead"] < 0.05, (

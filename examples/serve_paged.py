@@ -38,6 +38,12 @@ def main():
                     metavar="N", help="per-step token budget (default: "
                     "the tuned tree's roofline suggestion or 32 when "
                     "--chunked-prefill, else 8192)")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="tensor-parallel mesh size: the unified step "
+                         "runs under shard_map with KV pools sharded on "
+                         "the head axis (docs/serving.md); on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first")
     ap.add_argument("--padded", action="store_true",
                     help="use the padded per-kind step (decode / prefill "
                          "/ cached-prefill executables) instead of the "
@@ -109,7 +115,8 @@ def main():
                  enable_chunked_prefill=args.chunked_prefill,
                  max_prefill_tokens=budget,
                  fused_sampling=not args.no_fused_sampling,
-                 telemetry=tel)
+                 telemetry=tel,
+                 tp=args.tp)
     rng = np.random.default_rng(0)
     shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
     prompts = [shared + list(rng.integers(1, cfg.vocab_size,

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.attention import heuristics
-from repro.core.paged.kv_cache import gather_pages
+from repro.core.paged.kv_cache import gather_pages, require_single_pool
 from repro.kernels.flash_attention.ref import flash_attention_xla
 from repro.kernels.paged_attention import ops as paged_ops
 
@@ -64,7 +64,7 @@ def decode_attention(
         )
     if backend == "pallas":
         assert v_pages is not None, "pallas MLA decode uses the xla path"
-        assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
+        require_single_pool(k_pages, "decode_attention[pallas]")
         cfg = heuristics.validate(
             kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
         return paged_ops.paged_attention_decode(
@@ -205,7 +205,7 @@ def prefill_attention_uniform(
     if backend == "pallas":
         cfg = heuristics.validate(
             kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
-        assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
+        require_single_pool(k_pages, "prefill_attention_uniform[pallas]")
         # uniform padded layout == ragged layout with stride-s starts
         qsl = (jnp.arange(b + 1, dtype=jnp.int32) * s)
         out = paged_ops.paged_attention_prefill(
@@ -250,7 +250,7 @@ def prefill_attention_cached(
     if backend == "pallas":
         cfg = heuristics.validate(
             kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
-        assert k_pages.shape[1] == 1, "pallas path runs per-pool (shard-local)"
+        require_single_pool(k_pages, "prefill_attention_cached[pallas]")
         qsl = jnp.arange(b + 1, dtype=jnp.int32) * s
         out = paged_ops.paged_attention_prefill(
             q.reshape(b * s, hq, dk), k_pages[:, 0], v_pages[:, 0],
@@ -320,13 +320,6 @@ def _chunked_flash_xla(
 # bound, not a math knob -- any value gives identical results)
 _RAGGED_XLA_ROW_CHUNK = 64
 
-_SINGLE_POOL_MSG = (
-    "token-packed ragged attention runs per-pool (shard-local): the packed "
-    "token stream has no pool axis, so a multi-pool cache (num_pools=%d) "
-    "must be shard_map'ed so each pool sees only its local sequences"
-)
-
-
 def _ragged_attention_xla(
     q: jax.Array,  # [T, Hq, Dk] token-packed
     k_pages: jax.Array,
@@ -350,7 +343,7 @@ def _ragged_attention_xla(
     hardware); the pallas path is the performance path."""
     t = q.shape[0]
     s = query_lens.shape[0]
-    assert k_pages.shape[1] == 1, _SINGLE_POOL_MSG % k_pages.shape[1]
+    require_single_pool(k_pages, "_ragged_attention_xla")
     tok = jnp.arange(t, dtype=jnp.int32)
     # owning sequence per token (vectorized binary search, paper §6.1);
     # out-of-range (padded) tokens clamp to the last row and mask dead
@@ -424,7 +417,7 @@ def prefill_attention_ragged(
         )
     cfg = heuristics.validate(
         kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
-    assert k_pages.shape[1] == 1, _SINGLE_POOL_MSG % k_pages.shape[1]
+    require_single_pool(k_pages, "prefill_attention_ragged[pallas]")
     return paged_ops.paged_attention_prefill(
         q, k_pages[:, 0], v_pages[:, 0], page_table, context_lens,
         query_start_loc, query_lens, block_q=cfg.block_q, tile=cfg.tile,
@@ -470,7 +463,7 @@ def unified_attention(
         )
     cfg = heuristics.validate(
         kernel_cfg or heuristics.KernelConfig("gqa"), k_pages.shape[3])
-    assert k_pages.shape[1] == 1, _SINGLE_POOL_MSG % k_pages.shape[1]
+    require_single_pool(k_pages, "unified_attention[pallas]")
     return paged_ops.paged_attention_unified(
         q, k_pages[:, 0], v_pages[:, 0], page_table, context_lens,
         query_start_loc, query_lens, num_decode_seqs=num_decode_seqs,

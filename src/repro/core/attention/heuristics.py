@@ -45,6 +45,12 @@ class BatchProfile:
     decode_share: float = 1.0  # fraction of decode requests in the batch
     avg_query_len: int = 1
     total_tokens: int = 0  # packed token-stream length (0: per-phase launch)
+    # mesh fingerprint: tuned trees are keyed per (arch, tp) — a tp-split
+    # head axis changes per-device arithmetic intensity, so a tree fit at
+    # tp=1 must not silently steer a tp=4 deployment (PAPERS.md:
+    # portability needs re-autotuning per deployment shape).  LAST field:
+    # telemetry serializes profiles with dataclasses.astuple.
+    tp: int = 1
 
 
 _DECODE_TREE: list[tuple[dict, KernelConfig]] | None = None

@@ -104,6 +104,27 @@ class PageAllocator:
             "evictions": 0,
         }
 
+    def device_stats(self, device: int) -> dict:
+        """Per-device pool view under head-axis tensor parallelism: every
+        device holds the SAME page occupancy (only the KV head slice
+        differs), so each view is this host allocator's snapshot tagged
+        with its device index.  A future expert/data-parallel split with
+        genuinely divergent per-device occupancy overrides this."""
+        s = self.stats()
+        s["device"] = device
+        return s
+
+    def mesh_stats(self, num_devices: int = 1) -> dict:
+        """Aggregate pool snapshot across the mesh: every stat key summed
+        over the per-device views (at num_devices=1 the values equal
+        `stats()` exactly), plus `num_devices` and the `per_device` list
+        so invariants can be checked per device AND in aggregate."""
+        per = [self.device_stats(d) for d in range(num_devices)]
+        agg = {k: sum(d[k] for d in per) for k in per[0] if k != "device"}
+        agg["num_devices"] = num_devices
+        agg["per_device"] = per
+        return agg
+
 
 class RefCountedPageAllocator(PageAllocator):
     """Ref-counted pool with an LRU pool of cached-but-unreferenced pages.

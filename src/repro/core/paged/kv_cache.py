@@ -22,6 +22,66 @@ import jax
 import jax.numpy as jnp
 
 
+class ShardingError(ValueError):
+    """A launch or mesh configuration violates the sharding contract.
+
+    Raised with the offending shapes in the message wherever a paged
+    kernel requires a shard-local (single-pool) view, or where a mesh
+    executor cannot split the model as requested (head counts not
+    divisible by tp, missing devices, unsupported engine path).
+    """
+
+
+def require_single_pool(k_pages: jax.Array, site: str):
+    """Paged kernels run on a shard-local pool view: [L?, Hkv, 1, P, ps, D].
+
+    The pool axis is the data-parallel degree; anything >1 must be split
+    by the caller (shard_map / per-pool vmap) before reaching a kernel.
+    """
+    pool_axis = k_pages.ndim - 4
+    if k_pages.shape[pool_axis] != 1:
+        raise ShardingError(
+            f"{site}: expected a shard-local single-pool KV view but got "
+            f"num_pools={k_pages.shape[pool_axis]} (k_pages shape "
+            f"{tuple(k_pages.shape)}); split the pool axis across the mesh "
+            f"before launching the kernel"
+        )
+
+
+def local_kv_heads(num_kv_heads: int, num_devices: int,
+                   *, num_q_heads: int | None = None) -> int:
+    """Per-device KV head count under head-axis tensor parallelism.
+
+    Whole heads per device keeps every page gather shard-local and the
+    math bit-identical, so both head counts must divide evenly.
+    """
+    if num_kv_heads % num_devices:
+        raise ShardingError(
+            f"cannot shard num_kv_heads={num_kv_heads} across "
+            f"tp={num_devices} devices: the KV pool is split on the head "
+            f"axis in whole heads (num_kv_heads % tp must be 0)"
+        )
+    if num_q_heads is not None and num_q_heads % num_devices:
+        raise ShardingError(
+            f"cannot shard num_q_heads={num_q_heads} across "
+            f"tp={num_devices} devices: query heads are split in whole "
+            f"GQA groups (num_q_heads % tp must be 0)"
+        )
+    return num_kv_heads // num_devices
+
+
+def shard_cache_specs(specs: dict, num_devices: int) -> dict:
+    """Per-device view of `make_kv_cache_specs` output: the head axis
+    (dim 1) is divided across the mesh, everything else is replicated."""
+    out = {}
+    for name, s in specs.items():
+        local_kv_heads(s.shape[1], num_devices)
+        shape = list(s.shape)
+        shape[1] //= num_devices
+        out[name] = jax.ShapeDtypeStruct(tuple(shape), s.dtype)
+    return out
+
+
 def make_kv_cache_specs(num_layers, num_kv_heads, num_pools, pages_per_pool,
                         page_size, k_dim, v_dim, dtype):
     """ShapeDtypeStruct specs — v_dim 0 means V is a view into the latent K

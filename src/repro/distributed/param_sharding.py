@@ -95,49 +95,97 @@ def assign_param_shardings(abstract_params, *, mesh: Mesh, fsdp: bool,
 
 
 def cache_spec(path: str, leaf, *, mesh: Mesh,
-               batch_axes: tuple[str, ...]) -> P:
+               batch_axes: tuple[str, ...],
+               model_axis: str = "model") -> P:
     """Serving-cache sharding.
 
     KV pages  [L, Hkv, pools, P, ps, D]: pools on the batch axes (each DP
-        shard owns one pool), Hkv on 'model' when divisible;
-    SSM state [L, B, ...]: B on the batch axes, the head dim on 'model'
-        when divisible.
+        shard owns one pool), Hkv on the model axis when divisible;
+    SSM state [L, B, ...]: B on the batch axes, the head dim on the model
+        axis when divisible.
+
+    `model_axis` defaults to the training/dryrun mesh name; the serving
+    mesh executor passes its own axis ("tp").
     """
     shape = leaf.shape
-    model_n = mesh.shape["model"]
+    model_n = mesh.shape[model_axis]
     data_n = _axes_size(mesh, batch_axes)
     if "k_pages" in path or "v_pages" in path:
         spec = [None] * leaf.ndim
-        if shape[2] % data_n == 0:
+        if batch_axes and shape[2] % data_n == 0:
             spec[2] = tuple(batch_axes)
         if shape[1] % model_n == 0:
-            spec[1] = "model"  # prefer KV-head sharding (no score psum)
+            spec[1] = model_axis  # prefer KV-head sharding (no score psum)
         elif KV_HEADDIM_SHARD and shape[-1] % model_n == 0:
             # few KV heads (GQA/MLA): shard head_dim over 'model' — the
             # score contraction then carries a per-tile psum, but the cache
             # fits (llama3-405b decode_32k: 2.1 TB of KV). §Perf also
             # evaluates the replicated-within-pool alternative
             # (KV_HEADDIM_SHARD=False): more HBM, near-zero collectives.
-            spec[-1] = "model"
+            spec[-1] = model_axis
         return P(*spec)
     # state caches: [L, B, heads?/dim...]
     spec = [None] * leaf.ndim
-    if leaf.ndim >= 2 and shape[1] % data_n == 0:
+    if leaf.ndim >= 2 and batch_axes and shape[1] % data_n == 0:
         spec[1] = tuple(batch_axes)
     if leaf.ndim >= 3 and shape[2] % model_n == 0:
-        spec[2] = "model"
+        spec[2] = model_axis
     return P(*spec)
 
 
 def assign_cache_shardings(abstract_cache, *, mesh: Mesh,
-                           batch_axes: tuple[str, ...]):
+                           batch_axes: tuple[str, ...],
+                           model_axis: str = "model"):
     flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
     out = []
     for path, leaf in flat:
         spec = cache_spec(jax.tree_util.keystr(path), leaf, mesh=mesh,
-                          batch_axes=batch_axes)
+                          batch_axes=batch_axes, model_axis=model_axis)
         out.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Serving tensor parallelism (the mesh executor, docs/serving.md)
+# ---------------------------------------------------------------------------
+
+# Projections whose OUTPUT dim is whole attention heads. These are the ONLY
+# params the serving executor shards: each device computes its own head
+# block end to end (column-parallel, no comm), the KV pages split on the
+# same head axis, and one all-gather of attention outputs reassembles the
+# full head set before the replicated `wo`. No contraction is ever split,
+# so per-device math is BIT-IDENTICAL to the single-device program — the
+# property the tp differential tests pin. Fused `wqkv` stays replicated
+# (its output interleaves q|k|v, so a contiguous split would not land on
+# head boundaries); the attention layer slices local heads post-projection.
+SERVE_HEAD_PARALLEL = ("wq", "wk", "wv")
+
+
+def serve_param_spec(path: str, leaf, *, tp: int, axis: str = "tp") -> P:
+    if tp == 1 or getattr(leaf, "ndim", 0) < 1:
+        return P()
+    if any(f"'{n}'" in path for n in SERVE_HEAD_PARALLEL) \
+            and leaf.shape[-1] % tp == 0:
+        spec = [None] * leaf.ndim
+        spec[-1] = axis  # output (head) dim: w [d, H*dh], b [H*dh]
+        return P(*spec)
+    return P()
+
+
+def serve_param_specs(params, *, tp: int, axis: str = "tp"):
+    """Pytree of PartitionSpecs mirroring `params` (shard_map in_specs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [serve_param_spec(jax.tree_util.keystr(p), leaf, tp=tp, axis=axis)
+           for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def assign_serve_param_shardings(params, *, mesh: Mesh, axis: str = "tp"):
+    tp = mesh.shape[axis]
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        serve_param_specs(params, tp=tp, axis=axis),
+        is_leaf=lambda x: isinstance(x, P))
 
 
 def batch_spec(key: str, leaf, *, mesh: Mesh,

@@ -16,10 +16,39 @@ Rule sets:
 from __future__ import annotations
 
 import contextlib
+import dataclasses
+import inspect
 import threading
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# jax moved shard_map out of experimental (and renamed the replication-
+# check kwarg check_rep -> check_vma) across the versions we support
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map
+SHARD_MAP_NOCHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else {"check_rep": False}
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh position of a manually-sharded (shard_map) model invocation.
+
+    Threaded as static metadata through `apply_unified` -> `attention` so
+    per-device code knows which named axis to all-gather over and how many
+    ways the head axis was split.  Hashable/frozen: safe to close over in
+    the functools.partial bodies jit caches on.
+    """
+
+    axis: str = "tp"
+    size: int = 1
+
 
 _state = threading.local()
 

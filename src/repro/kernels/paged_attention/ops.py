@@ -21,6 +21,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core.paged.kv_cache import ShardingError
 from repro.kernels.paged_attention import kernel as K
 from repro.utils.misc import cdiv, round_up
 
@@ -233,9 +234,11 @@ def paged_attention_unified(
     """
     nd = num_decode_seqs
     t = q.shape[0]
-    assert nd <= t and nd <= query_lens.shape[0], (
-        f"decode region ({nd} rows) exceeds the packed batch "
-        f"(T={t}, S={query_lens.shape[0]})")
+    if nd > t or nd > query_lens.shape[0]:
+        raise ShardingError(
+            f"paged_attention_unified: decode region ({nd} rows) exceeds "
+            f"the packed batch (q shape {tuple(q.shape)}, "
+            f"S={query_lens.shape[0]})")
     parts = []
     if nd:
         parts.append(paged_attention_decode(

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.attention import backend as attn_backend
-from repro.core.paged.kv_cache import physical_slots, write_pages
+from repro.core.paged.kv_cache import (
+    ShardingError, physical_slots, write_pages,
+)
 from repro.distributed.sharding import constrain
 from repro.kernels.flash_attention.ref import flash_attention_xla
 from repro.models import layers as L
@@ -73,13 +75,18 @@ def init_attention(cfg: ModelConfig, key):
 def _qkv(cfg: ModelConfig, p, x, positions):
     b, s, _ = x.shape
     dh = cfg.resolved_head_dim
-    hq, hkv = cfg.num_q_heads, cfg.num_kv_heads
     if "wqkv" in p:
+        hq, hkv = cfg.num_q_heads, cfg.num_kv_heads
         qkv = L.linear(p["wqkv"], x)
         q = qkv[..., : hq * dh].reshape(b, s, hq, dh)
         k = qkv[..., hq * dh : (hq + hkv) * dh].reshape(b, s, hkv, dh)
         v = qkv[..., (hq + hkv) * dh :].reshape(b, s, hkv, dh)
     else:
+        # head counts come from the param shapes, not cfg: under the mesh
+        # executor each device holds a column (head) slice of wq/wk/wv and
+        # projects straight to its LOCAL heads
+        hq = p["wq"]["w"].shape[-1] // dh
+        hkv = p["wk"]["w"].shape[-1] // dh
         q = L.linear(p["wq"], x).reshape(b, s, hq, dh)
         k = L.linear(p["wk"], x).reshape(b, s, hkv, dh)
         v = L.linear(p["wv"], x).reshape(b, s, hkv, dh)
@@ -91,9 +98,24 @@ def _qkv(cfg: ModelConfig, p, x, positions):
     return q, k, v
 
 
+def _local_heads(x, n_local: int, axis_name: str):
+    """This device's contiguous head block of a [B, S, H, D] projection.
+
+    No-op when the projection params were themselves head-sharded (the
+    tensor already holds only local heads); otherwise — fused-wqkv params
+    stay replicated — slice block `axis_index` out of the full head set.
+    RoPE is per-head/position-based, so slice-after-rope == rope-after-
+    slice and either entry point is bit-identical.
+    """
+    if x.shape[2] == n_local:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    return jax.lax.dynamic_slice_in_dim(x, idx * n_local, n_local, axis=2)
+
+
 def attention(cfg: ModelConfig, p, x, positions, *, mode: str,
               cache=None, meta=None, backend: str = "xla",
-              kernel_cfg=None):
+              kernel_cfg=None, shard=None):
     """x [B, S, d]. Returns (out [B, S, d], new_cache_or_None).
 
     cache: {'k_pages': [Hkv,P,ps,Dk], 'v_pages': ...} for this layer.
@@ -101,13 +123,29 @@ def attention(cfg: ModelConfig, p, x, positions, *, mode: str,
     kernel_cfg: static heuristics.KernelConfig chosen at dispatch time
     (None -> the backend's default); selects the paged-kernel variant /
     tile / segments, so it must be part of the engine's executable key.
+    shard: static ShardCtx when running per-device inside the mesh
+    executor's shard_map (docs/serving.md): q/k/v and the KV pages carry
+    only `H/tp` local heads, and ONE all-gather over `shard.axis`
+    reassembles the full head set before the replicated `wo`.
     """
     if cfg.mla.kv_lora_rank:
+        if shard is not None and shard.size > 1:
+            raise ShardingError(
+                "MLA attention has a single latent KV head and cannot be "
+                f"head-sharded (requested tp={shard.size})")
         return _mla_attention(cfg, p, x, positions, mode=mode, cache=cache,
                               meta=meta, backend=backend)
     b, s, _ = x.shape
     dh = cfg.resolved_head_dim
     q, k, v = _qkv(cfg, p, x, positions)
+    if shard is not None and shard.size > 1:
+        if mode != "unified":
+            raise ShardingError(
+                f"the mesh executor only runs the packed unified step; "
+                f"attention mode={mode!r} cannot run under tp={shard.size}")
+        q = _local_heads(q, cfg.num_q_heads // shard.size, shard.axis)
+        k = _local_heads(k, cfg.num_kv_heads // shard.size, shard.axis)
+        v = _local_heads(v, cfg.num_kv_heads // shard.size, shard.axis)
     scale = dh**-0.5
 
     if mode == "train":
@@ -134,6 +172,11 @@ def attention(cfg: ModelConfig, p, x, positions, *, mode: str,
                 num_decode_seqs=meta["num_decode_seqs"], scale=scale,
                 kernel_cfg=kernel_cfg,
             )[None]
+            if shard is not None and shard.size > 1:
+                # the ONE per-step collective: devices hold disjoint
+                # contiguous head blocks, so a tiled all-gather on the
+                # head axis reassembles exactly the single-device o
+                o = jax.lax.all_gather(o, shard.axis, axis=2, tiled=True)
             new_cache = {"k_pages": kp, "v_pages": vp}
         elif mode in ("prefill", "prefill_cached"):
             qlens = meta["query_lens"]

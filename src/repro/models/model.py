@@ -224,11 +224,11 @@ def make_cache(cfg: ModelConfig, *, max_seqs: int, num_pages: int,
 
 
 def _decoder_block(cfg, p, x, positions, *, mode, cache, meta, backend,
-                   kernel_cfg=None):
+                   kernel_cfg=None, shard=None):
     h, new_cache = attention(
         cfg, p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps), positions,
         mode=mode, cache=cache, meta=meta, backend=backend,
-        kernel_cfg=kernel_cfg,
+        kernel_cfg=kernel_cfg, shard=shard,
     )
     x = x + h
     h2 = L.rms_norm(p["ln2"], x, cfg.norm_eps)
@@ -267,10 +267,14 @@ def _head(cfg, params, x):
 
 
 def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
-            cache=None, meta=None, backend: str = "xla", kernel_cfg=None):
+            cache=None, meta=None, backend: str = "xla", kernel_cfg=None,
+            shard=None):
     """Returns (logits [B,S,V] fp32, new_cache, aux_loss).  `kernel_cfg`
     (a heuristics.KernelConfig or None) is STATIC dispatch metadata —
-    chosen host-side per launch, baked into the traced program."""
+    chosen host-side per launch, baked into the traced program.  `shard`
+    (a sharding.ShardCtx or None) marks a per-device invocation inside
+    the serving mesh executor's shard_map; only the attention head axis
+    is sharded, everything else runs replicated."""
     x = _embed_inputs(cfg, params, inputs)
     meta = meta or {}
     aux_total = jnp.zeros((), jnp.float32)
@@ -286,7 +290,7 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
                    if attn_cache is not None else None)
             x, nc, aux = _decoder_block(cfg, lp, x, positions, mode=mode,
                                         cache=c_l, meta=meta, backend=backend,
-                                        kernel_cfg=kernel_cfg)
+                                        kernel_cfg=kernel_cfg, shard=shard)
             aux_total += aux
             if nc is not None:
                 new_cache.setdefault("_lead", []).append(nc)
@@ -297,7 +301,7 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
             p_l, c_l = per_layer
             x, nc, a = _decoder_block(cfg, p_l, x, positions, mode=mode,
                                       cache=c_l, meta=meta, backend=backend,
-                                      kernel_cfg=kernel_cfg)
+                                      kernel_cfg=kernel_cfg, shard=shard)
             return (x, aux + a), nc
 
         if remat:
@@ -545,7 +549,7 @@ def apply_prefill_cached(cfg: ModelConfig, params, cache, batch, *,
 def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
                   kernel_cfg=None, num_decode_seqs: int = 0,
                   sample: bool = False, seed: int = 0,
-                  return_logits: bool = False):
+                  return_logits: bool = False, shard=None):
     """Token-packed unified step: ONE executable for decode rows, fresh
     prefill chunks, and resumed/cached chunks — and, with `sample=True`,
     for the last-token gather + sampling too, so the only thing that
@@ -575,7 +579,13 @@ def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
     (sampled_tokens, last_logits, new_cache) with `return_logits=True`
     (the debug-logits flag — it reintroduces the [S, V] transfer, so it
     is off in production).  Attention-family models only (SSM/hybrid
-    state is slot-indexed, not page-addressable)."""
+    state is slot-indexed, not page-addressable).
+
+    `shard` (sharding.ShardCtx) marks a per-device invocation inside the
+    mesh executor's shard_map: attention computes only the local head
+    block and all-gathers outputs, so the epilogue here (last-token
+    gather + sampling) runs replicated and bit-identically on every
+    device."""
     assert cfg.family in ("dense", "moe", "audio", "vlm") \
         and not cfg.mla.kv_lora_rank, \
         f"unified packed step unsupported for family={cfg.family!r}/MLA"
@@ -591,6 +601,7 @@ def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
     logits, new_cache, _ = forward(
         cfg, params, inputs, batch["positions"], mode="unified",
         cache=cache, meta=meta, backend=backend, kernel_cfg=kernel_cfg,
+        shard=shard,
     )
     # per-sequence last-token rows of the packed stream ([1, T, V] ->
     # [S, V]); 0-length (padded) rows clamp to their segment start — the

@@ -16,21 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import constrain
-from repro.models import layers as L
-
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:  # jax<0.6: experimental location
-    from jax.experimental.shard_map import shard_map as _shard_map
-# the rep-check kwarg was renamed check_rep -> check_vma independently of
-# the move to jax.shard_map; gate on the actual signature
-import inspect as _inspect
-_SHARD_MAP_NOCHECK = (
-    {"check_vma": False}
-    if "check_vma" in _inspect.signature(_shard_map).parameters
-    else {"check_rep": False}
+from repro.distributed.sharding import (
+    SHARD_MAP_NOCHECK as _SHARD_MAP_NOCHECK,
+    constrain,
+    shard_map as _shard_map,
 )
+from repro.models import layers as L
 
 
 def init_moe(cfg: ModelConfig, key):

@@ -137,7 +137,8 @@ class Telemetry:
 
     def set_arch(self, **kw) -> None:
         """Record model geometry (num_q_heads, num_kv_heads, head_dim,
-        page_size) for the latency-grid export."""
+        page_size) and the mesh shape (tp) for the latency-grid export —
+        a grid recorded at one tp must refit only same-tp deployments."""
         self._arch.update(kw)
 
     # -- step phases ---------------------------------------------------
@@ -184,7 +185,8 @@ class Telemetry:
                 self._launch_h.observe(dt, kind=kind)
             self._phase_h.observe(dt, phase="launch")
         self.tracer.complete(f"launch:{kind}", t0, t1, track="engine",
-                             tokens=tokens, compiled=compiled, timed=timed)
+                             tokens=tokens, compiled=compiled, timed=timed,
+                             tp=self._arch.get("tp", 1))
         if compiled or not timed or profile is None or kcfg is None:
             return  # grid wants timed steady-state replay latency only
         key = (grid_phase or kind, dataclasses.astuple(profile),
@@ -263,7 +265,8 @@ class Telemetry:
                 "phase": phase,
                 "profile": dict(zip(
                     ("num_seqs", "max_context", "group", "page_size",
-                     "decode_share", "avg_query_len", "total_tokens"),
+                     "decode_share", "avg_query_len", "total_tokens",
+                     "tp"),
                     prof)),
                 "config": dict(zip(
                     ("variant", "tile", "num_segments", "block_q"), cfg)),

@@ -113,6 +113,7 @@ from repro.configs.base import ModelConfig
 from repro.core.attention import heuristics
 from repro.core.paged.allocator import RefCountedPageAllocator
 from repro.models import model as M
+from repro.serving.executor import make_executor
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import PENDING_TOKEN, Request, State
 from repro.serving.scheduler import Scheduler
@@ -170,10 +171,11 @@ class Engine:
         enable_chunked_prefill: bool = False,
         seed: int = 0,
         telemetry=None,
+        tp: int = 1,
     ):
         self.cfg = cfg
-        self.params = params
         self.backend = backend
+        self.tp = tp
         # obs.Telemetry | None.  None (the default) disables every hook
         # AND the block_until_ready timing barriers — the serving loop
         # stays exactly as asynchronous as before.
@@ -183,7 +185,8 @@ class Engine:
                 num_q_heads=cfg.num_q_heads,
                 num_kv_heads=max(cfg.num_kv_heads, 1),
                 head_dim=cfg.resolved_head_dim,
-                page_size=cfg.page_size)
+                page_size=cfg.page_size,
+                tp=tp)
         self.max_seqs = max_seqs
         self.num_pages = num_pages
         self.pages_per_seq = cdiv(max_model_len, cfg.page_size)
@@ -219,6 +222,15 @@ class Engine:
             log.info("engine: fused sampling needs the packed step; "
                      "using the two-dispatch sampler")
         self.seed = seed
+        # mesh-aware launch layer: places params/cache and builds the
+        # unified executables.  tp=1 degenerates to the pre-executor jit
+        # partial (bit-identical); tp>1 runs the packed step under
+        # shard_map with the KV pool split on the head axis.
+        self.executor = make_executor(
+            cfg, backend=backend, tp=tp, max_seqs=max_seqs,
+            fused=self._fused, seed=seed, debug_logits=debug_logits,
+            packed=self._packed)
+        self.params = self.executor.place_params(params)
         self._group = max(1, cfg.num_q_heads // max(cfg.num_kv_heads, 1))
         self.dispatch_counts: collections.Counter = collections.Counter()
         self._last_dispatch: dict[str, dict] = {}
@@ -258,7 +270,8 @@ class Engine:
                                prefix_cache=self.prefix_cache,
                                enable_chunked_prefill=enable_chunked_prefill,
                                telemetry=telemetry)
-        self.cache = M.make_cache(cfg, max_seqs=max_seqs, num_pages=num_pages)
+        self.cache = self.executor.place_cache(
+            M.make_cache(cfg, max_seqs=max_seqs, num_pages=num_pages))
         self.page_table = np.zeros((max_seqs, self.pages_per_seq), np.int32)
         self.step_idx = 0
         self.prefilled_tokens = 0  # uncached tokens actually computed
@@ -298,19 +311,11 @@ class Engine:
             if kind.startswith("unified"):
                 # the whole packed step: b = seq bucket, s = token bucket;
                 # the static decode region (max_seqs rows) is part of the
-                # traced program like the KernelConfig
-                # fused-sampling flags are engine constants, baked into
-                # the traced program like num_decode_seqs — the cache key
-                # never varies with them within one engine
-                self._compiled[key] = jax.jit(
-                    functools.partial(M.apply_unified, self.cfg,
-                                      backend=self.backend,
-                                      kernel_cfg=kcfg,
-                                      num_decode_seqs=self.max_seqs,
-                                      sample=self._fused,
-                                      seed=self.seed,
-                                      return_logits=self._debug_logits)
-                )
+                # traced program like the KernelConfig.  Fused-sampling
+                # flags and the mesh placement are engine constants baked
+                # into the executor's traced program — the cache key never
+                # varies with them within one engine.
+                self._compiled[key] = self.executor.build_unified(kcfg)
             elif kind == "prefill":
                 self._compiled[key] = jax.jit(
                     functools.partial(M.apply_prefill, self.cfg,
@@ -344,6 +349,7 @@ class Engine:
             group=self._group, page_size=self.cfg.page_size,
             decode_share=1.0, avg_query_len=1,
             total_tokens=next_power_of_2(len(reqs)),
+            tp=self.tp,
         )
 
     def _prefill_profile(self, reqs: list[Request]) -> heuristics.BatchProfile:
@@ -356,6 +362,7 @@ class Engine:
             decode_share=0.0,
             avg_query_len=next_power_of_2(max(total // len(reqs), 1)),
             total_tokens=next_power_of_2(total),
+            tp=self.tp,
         )
 
     def _unified_profile(self, decode_reqs: list[Request],
@@ -378,6 +385,7 @@ class Engine:
             decode_share=len(decode_reqs) / nseq,
             avg_query_len=next_power_of_2(max(total // nseq, 1)),
             total_tokens=next_power_of_2(total),
+            tp=self.tp,
         )
 
     def _dispatch(self, phase: str,
@@ -648,7 +656,7 @@ class Engine:
                     self.page_table[slot] = 0
         # pool occupancy AFTER finishes released their pages, so the
         # snapshot matches the harness's pages-conserved invariant
-        stats["pool"] = self.alloc.stats()
+        stats["pool"] = self.alloc.mesh_stats(self.tp)
         stats["sampled_tokens"] = len(self._emitted)
         if tel:
             t_end = tel.clock.now()
@@ -688,7 +696,7 @@ class Engine:
                 self.sched.finish(req)
                 if slot is not None:
                     self.page_table[slot] = 0
-        stats["pool"] = self.alloc.stats()
+        stats["pool"] = self.alloc.mesh_stats(self.tp)
         stats["sampled_tokens"] = len(self._emitted)
         if tel:
             t_end = tel.clock.now()

@@ -31,10 +31,12 @@ from repro.serving.request import Request, State, make_requests
 # ---------------------------------------------------------------------------
 
 
-def build_cfg_params(arch: str = "smollm-135m", seed: int = 0):
+def build_cfg_params(arch: str = "smollm-135m", seed: int = 0, **overrides):
     """(cfg, params) of the reduced test model — wrap in a module-scoped
-    fixture so each test module pays init once."""
-    cfg = reduced(ARCHS[arch]).replace(dtype="float32")
+    fixture so each test module pays init once.  `overrides` patch cfg
+    fields on top of the reduction (the mesh suites need head counts
+    divisible by tp; the reduced default is 2 q / 1 kv head)."""
+    cfg = reduced(ARCHS[arch]).replace(dtype="float32", **overrides)
     params = M.init(cfg, jax.random.key(seed))
     return cfg, params
 
@@ -104,13 +106,24 @@ def assert_step_invariants(eng: Engine, stats: dict) -> None:
                 <= max(sched.max_prefill_tokens, stats["decode"])), stats
     eng.alloc.check_invariants([r.pages for r in sched.running])
     # the allocator snapshot surfaced in step stats must agree with the
-    # pool it describes: states partition [1, num_pages) and outstanding
-    # refs equal the running requests' page-list multiplicity
+    # pool it describes — per device AND in aggregate.  `pool` is the
+    # mesh aggregate (every stat summed over per-device views; under
+    # head-sharded tp each device mirrors the page occupancy, so the
+    # aggregate is num_devices x the host pool), and each per-device
+    # view must itself partition [1, num_pages) and account for every
+    # running request's page references.
     pool = stats["pool"]
+    n_dev = pool.get("num_devices", 1)
+    assert n_dev == getattr(eng, "tp", 1), pool
+    refs = sum(len(r.pages) for r in sched.running)
     assert (pool["free_pages"] + pool["referenced_pages"]
-            + pool["evictable_pages"] == eng.alloc.num_pages - 1), pool
-    assert pool["total_refs"] == sum(
-        len(r.pages) for r in sched.running), pool
+            + pool["evictable_pages"]
+            == n_dev * (eng.alloc.num_pages - 1)), pool
+    assert pool["total_refs"] == n_dev * refs, pool
+    for dev in pool.get("per_device", [pool]):
+        assert (dev["free_pages"] + dev["referenced_pages"]
+                + dev["evictable_pages"] == eng.alloc.num_pages - 1), dev
+        assert dev["total_refs"] == refs, dev
 
 
 def run_requests(eng: Engine, prompts, *, max_new_tokens: int = 8,

@@ -20,6 +20,7 @@ import pytest
 import serving_harness as H
 from repro.core.attention import backend as attn_backend
 from repro.core.attention import heuristics
+from repro.core.paged import kv_cache as KV
 from repro.kernels.paged_attention import ops, ref
 
 BUDGET = 16
@@ -123,7 +124,7 @@ def test_ragged_multi_pool_is_a_hard_error():
         rng, dec_ctx=[8], qlens_pref=[4], ctx_prior=[0])
     two_pools = jnp.stack([kp, kp], axis=1)
     for backend in ("xla", "pallas"):
-        with pytest.raises(AssertionError, match="per-pool"):
+        with pytest.raises(KV.ShardingError, match="num_pools=2"):
             attn_backend.prefill_attention_ragged(
                 backend, q, two_pools, two_pools, pt, ctx, qsl, ql)
 
