@@ -14,7 +14,8 @@ test-full:
 # ordering, engine/scheduler behavior, fused sampling + the async
 # stream loop, the allocator property tests, the autotune
 # sweep/round-trip tests, and the observability suite (metrics
-# registry + telemetry-instrumented serving) — kernel sweeps and arch
+# registry + scrape server/flight recorder + telemetry-instrumented
+# serving with the online refit daemon) — kernel sweeps and arch
 # matrices (-m slow) don't gate it.
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" \
@@ -23,7 +24,7 @@ test-fast:
 	  tests/test_prefix_cache.py \
 	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py \
 	  tests/test_autotune.py tests/test_obs_metrics.py \
-	  tests/test_obs_serving.py
+	  tests/test_obs_server.py tests/test_obs_serving.py
 
 # Multi-device (mesh executor) suites on forced CPU host devices: the
 # tp={1,2,4} packed-serving differential, KV head-split shard specs,
@@ -40,8 +41,11 @@ bench:
 # CPU-side smoke: padding-waste (packed vs padded launched-token-slot
 # and compile_events counts on a mixed trace; fails if packing stops
 # paying) + fused-sampling (one-dispatch steady step, fused == two-
-# dispatch == stream token identity) + the telemetry-overhead guard
-# (metrics enabled must cost < 5% wall-clock).  Writes BENCH_e2e.json.
+# dispatch == stream token identity) + live-obs (mid-run /metrics
+# scrape over a real socket, flight-recorder breach latch, online
+# refit hot-swap token differential) + the telemetry-overhead guard
+# (full observability plane enabled must cost < 5% wall-clock).
+# Writes BENCH_e2e.json.
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/e2e_latency.py --scenario smoke \
 	  --json-out BENCH_e2e.json

@@ -94,9 +94,11 @@ def run_padding_waste(emit, cfg=None, params=None):
 
 def run_telemetry_overhead(emit, cfg=None, params=None, repeats=5):
     """`telemetry-overhead` scenario: the padding-waste mixed trace with
-    telemetry fully enabled (metrics + tracing + latency grid + sampled
-    launch-timing barriers) vs disabled.  The observability layer must be
-    effectively free: the acceptance guard is < 5% per-step overhead.
+    the observability plane fully enabled (metrics + tracing + latency
+    grid + sampled launch-timing barriers + a LIVE MetricsServer scrape
+    thread + an armed RefitDaemon on the engine hook) vs disabled.  The
+    observability layer must be effectively free: the acceptance guard
+    is < 5% per-step overhead.
 
     Measurement discipline: each arm gets its OWN engine — the jitted
     executable caches hang off `functools.partial` wrappers created per
@@ -111,7 +113,9 @@ def run_telemetry_overhead(emit, cfg=None, params=None, repeats=5):
     if cfg is None:
         cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
         params = M.init(cfg, jax.random.key(0))
-    from repro.obs import Telemetry
+    import tempfile as _tempfile
+
+    from repro.obs import MetricsServer, RefitDaemon, Telemetry
     rng = np.random.default_rng(11)
     prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
                for n in (40, 9, 33, 25, 6, 30)]
@@ -127,17 +131,31 @@ def run_telemetry_overhead(emit, cfg=None, params=None, repeats=5):
             step_times.append(time.perf_counter() - t1)
         return step_times
 
-    engines = {}
-    for enabled in (False, True):
-        engines[enabled] = Engine(
-            cfg, params, max_seqs=4, num_pages=256, max_model_len=256,
-            enable_chunked_prefill=True, max_prefill_tokens=48,
-            telemetry=Telemetry() if enabled else None)
-        drive(engines[enabled])  # warmup: capture this arm's executables
-    drains = {False: [], True: []}
-    for _ in range(repeats):
-        for enabled in (False, True):
-            drains[enabled].append(drive(engines[enabled]))
+    with _tempfile.TemporaryDirectory() as d:
+        tel = Telemetry()
+        # the enabled arm carries the LIVE plane: a scrape-server thread
+        # on an ephemeral port and a refit daemon evaluated from the
+        # engine's on_step hook every step (min_new is set beyond the
+        # trace so the trigger is watched but never fires — the cost
+        # under guard is the watch, not an actual refit)
+        server = MetricsServer(tel, snapshot_dir=None).start()
+        daemon = RefitDaemon(tel, out_dir=d, min_new=10 ** 9)
+        try:
+            engines = {}
+            for enabled in (False, True):
+                engines[enabled] = Engine(
+                    cfg, params, max_seqs=4, num_pages=256,
+                    max_model_len=256, enable_chunked_prefill=True,
+                    max_prefill_tokens=48,
+                    telemetry=tel if enabled else None,
+                    refit=daemon if enabled else None)
+                drive(engines[enabled])  # warmup: capture executables
+            drains = {False: [], True: []}
+            for _ in range(repeats):
+                for enabled in (False, True):
+                    drains[enabled].append(drive(engines[enabled]))
+        finally:
+            server.stop()
     # per-step-index noise floor: min over repeats, then sum the schedule
     floor = {k: sum(min(ts) for ts in zip(*v)) for k, v in drains.items()}
     nsteps = min(len(d) for v in drains.values() for d in v)
@@ -146,11 +164,100 @@ def run_telemetry_overhead(emit, cfg=None, params=None, repeats=5):
          f"per-step-index min over {repeats} interleaved warmed drains, "
          f"summed ({nsteps} steps)")
     emit("telemetry_overhead/wall_s/enabled", floor[True],
-         "same trace with metrics + tracing + latency grid on")
+         "same trace with metrics + tracing + latency grid + live "
+         "scrape server + armed refit daemon on")
     emit("telemetry_overhead/overhead_pct", 100.0 * overhead,
          "enabled / disabled noise-floor ratio - 1 (guard: < 5%)")
     return {"disabled": floor[False], "enabled": floor[True],
-            "overhead": overhead}
+            "overhead": overhead, "refits": daemon.refits}
+
+
+def run_live_obs(emit, cfg=None, params=None):
+    """`live-obs` scenario: the full observability plane active around a
+    serving run — /metrics scraped over a real socket MID-RUN and parsed
+    against the exposition grammar, the flight recorder breached once by
+    a deliberately impossible SLO (exactly one bounded dump, then the
+    latch holds), and the online refit daemon hot-swapping the heuristic
+    trees between steps.  The differential guard: the instrumented run
+    must emit token-for-token the same outputs as a bare engine — the
+    whole plane observes and re-routes dispatch, it never touches the
+    math."""
+    if cfg is None:
+        cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
+        params = M.init(cfg, jax.random.key(0))
+    import json as _json
+    import tempfile as _tempfile
+    from urllib.request import urlopen
+
+    from repro.obs import (
+        FlightRecorder, MetricsServer, RefitDaemon, Telemetry,
+    )
+    from repro.obs.metrics import parse_prometheus
+    rng = np.random.default_rng(11)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (40, 9, 33, 25, 6, 30)]
+
+    def drive(eng, scrape_at=None, url=None):
+        reqs = make_requests([list(p) for p in prompts], max_new_tokens=16)
+        for r in reqs:
+            eng.add_request(r)
+        steps, families = 0, None
+        while eng.sched.has_work:
+            eng.step()
+            steps += 1
+            if scrape_at is not None and steps == scrape_at:
+                with urlopen(url, timeout=10.0) as resp:
+                    assert resp.status == 200
+                    families = parse_prometheus(
+                        resp.read().decode("utf-8"))
+        return [r.output for r in reqs], steps, families
+
+    heuristics.reset()  # both arms must START from the default trees
+    baseline, _, _ = drive(Engine(cfg, params, max_seqs=4, num_pages=256,
+                                  max_model_len=256,
+                                  enable_chunked_prefill=True,
+                                  max_prefill_tokens=48))
+
+    with _tempfile.TemporaryDirectory() as d:
+        tel = Telemetry(trace_ring=True, launch_timing_interval=1)
+        server = MetricsServer(tel, snapshot_dir=d).start()
+        # 1ns SLO: breaches on the first eligible window -> exactly one
+        # dump, then the latch holds until p95 recovers (it can't)
+        flight = FlightRecorder(tel, slo_p95_s=1e-9, dump_dir=d,
+                                window=16, min_steps=4)
+        daemon = RefitDaemon(tel, out_dir=d, min_new=4)
+        eng = Engine(cfg, params, max_seqs=4, num_pages=256,
+                     max_model_len=256, enable_chunked_prefill=True,
+                     max_prefill_tokens=48, telemetry=tel, refit=daemon)
+        outputs, steps, families = drive(eng, scrape_at=5,
+                                         url=server.url())
+        with urlopen(server.url("/snapshot"), timeout=10.0) as resp:
+            snap = _json.loads(resp.read().decode("utf-8"))
+        server.stop()
+        heuristics.reset()
+        dump_files = [os.path.basename(p) + "*" for p in flight.dumps]
+        res = {
+            "outputs": outputs,
+            "baseline": baseline,
+            "steps": steps,
+            "families": len(families),
+            "snapshot_metrics": len(snap["metrics"]),
+            "dumps": len(flight.dumps),
+            "dump_paths": dump_files,
+            "refits": daemon.refits,
+            "swaps": daemon.swaps,
+            "swap_steps": list(daemon.swap_steps),
+        }
+    emit("live_obs/scrape_families", res["families"],
+         f"metric families parsed from a mid-run /metrics scrape "
+         f"(step 5 of {res['steps']}, real socket)")
+    emit("live_obs/flight_dumps", res["dumps"],
+         f"SLO-breach auto-dumps (1ns SLO; latch held): "
+         f"{', '.join(res['dump_paths'])}")
+    emit("live_obs/refit_swaps", res["swaps"],
+         f"heuristics hot-swaps at steps {res['swap_steps']} "
+         f"({res['refits']} refits)")
+    return res
 
 
 def run_fused_sampling(emit, cfg=None, params=None):
@@ -541,15 +648,16 @@ def tune_and_export_arch(cfg, path_json: str) -> dict:
 if __name__ == "__main__":
     # standalone smoke entry (`make bench-smoke`): the CPU-cheap scenarios
     # (CSV to stdout + machine-readable BENCH_e2e.json) in well under two
-    # minutes.  `smoke` = padding-waste + fused-sampling + the
-    # telemetry-overhead guard.
+    # minutes.  `smoke` = padding-waste + fused-sampling + live-obs
+    # (mid-run scrape / flight-recorder latch / refit hot-swap token
+    # differential) + the telemetry-overhead guard.
     import argparse
     import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="smoke",
                     choices=["smoke", "padding-waste", "fused-sampling",
-                             "telemetry-overhead", "tp-scaling",
-                             "_tp-child", "all"])
+                             "telemetry-overhead", "live-obs",
+                             "tp-scaling", "_tp-child", "all"])
     ap.add_argument("--json-out", default="BENCH_e2e.json", metavar="PATH",
                     help="machine-readable results ('' disables)")
     args = ap.parse_args()
@@ -606,6 +714,19 @@ if __name__ == "__main__":
                 f"{tp_res['1']['steps']} at tp=1")
         assert tp_res["1"]["preempted"] > 0, \
             "tp-scaling trace no longer exercises preemption"
+    if args.scenario in ("smoke", "live-obs", "all"):
+        lo = run_live_obs(_emit)
+        assert lo["outputs"] == lo["baseline"], (
+            "live observability plane changed emitted tokens — the "
+            "refit hot-swap must only re-route dispatch")
+        assert lo["dumps"] == 1, (
+            f"flight recorder under a breached SLO must dump exactly "
+            f"once (latch), got {lo['dumps']}")
+        assert lo["swaps"] >= 1, \
+            "online refit daemon never hot-swapped on the live grid"
+        assert lo["families"] >= 10, (
+            f"mid-run /metrics scrape parsed only {lo['families']} "
+            f"families")
     if args.scenario in ("smoke", "telemetry-overhead", "all"):
         tel_res = run_telemetry_overhead(_emit)
         assert tel_res["overhead"] < 0.05, (

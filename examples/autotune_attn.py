@@ -57,6 +57,14 @@ def main():
     ap.add_argument("--min-count", type=int, default=1,
                     help="with --refit-from: drop grid entries observed "
                          "fewer than this many warm launches")
+    ap.add_argument("--separate-host-overhead", action="store_true",
+                    help="with --refit-from: subtract the estimated "
+                         "per-launch host overhead (observed wall-clock "
+                         "minus the XLA cost_analysis roofline floor) "
+                         "before calibrating the cost model, so the tree "
+                         "ranks configs by device time (needs a grid "
+                         "recorded with device-side timing, i.e. "
+                         "flops/bytes_accessed entries)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,8 +75,9 @@ def main():
 
     if args.refit_from:
         from repro.autotune.tune import refit_from_telemetry
-        rep = refit_from_telemetry(args.refit_from, path_json, path_py,
-                                   min_count=args.min_count)
+        rep = refit_from_telemetry(
+            args.refit_from, path_json, path_py, min_count=args.min_count,
+            separate_host_overhead=args.separate_host_overhead)
         print(f"refit from {args.refit_from} -> {path_json} + {path_py}")
         for phase, st in rep["phases"].items():
             print(f"{phase}: {st['profiles']} observed profiles, "
@@ -76,6 +85,15 @@ def main():
                   f"points, calibration x{st['calibration_ratio']:.3g}, "
                   f"tuned-vs-best-fixed "
                   f"{st['tuned_vs_untuned_speedup']:.3f}x")
+            if st.get("host_overhead_s_est") is not None:
+                applied = st.get("host_overhead_applied_s", 0.0)
+                print(f"  device-side timing: host overhead "
+                      f"~{st['host_overhead_s_est'] * 1e3:.3f} ms/launch "
+                      f"(device fraction "
+                      f"{st['device_time_fraction']:.1%}), "
+                      + (f"subtracted before calibration"
+                         if applied else "diagnostic only "
+                         "(--separate-host-overhead to apply)"))
         print(f"\nserve with it:\n"
               f"  python examples/serve_paged.py --heuristics {path_json}")
         return

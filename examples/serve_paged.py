@@ -72,6 +72,26 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
                     help="enable telemetry and write a Chrome/Perfetto "
                          "trace (load at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="P",
+                    help="enable telemetry and serve live /metrics "
+                         "(Prometheus text), /snapshot and /trace on "
+                         "127.0.0.1:P while the engine runs (0 = pick an "
+                         "ephemeral port, printed at startup); periodic "
+                         "JSONL snapshots rotate into --metrics-dir")
+    ap.add_argument("--snapshot-interval", type=float, default=30.0,
+                    metavar="SEC", help="periodic snapshot cadence for "
+                         "the --metrics-port server (default 30s)")
+    ap.add_argument("--slo-p95", type=float, default=None, metavar="SEC",
+                    help="enable the flight recorder: when rolling p95 "
+                         "step latency breaches SEC, auto-dump the trace "
+                         "ring + a metrics snapshot into --metrics-dir "
+                         "(or cwd)")
+    ap.add_argument("--refit-every", type=int, default=None, metavar="N",
+                    help="enable the online refit daemon: after N new "
+                         "warm launch observations per (phase, profile) "
+                         "bucket, refit the heuristics from the live "
+                         "latency grid and hot-swap the trees between "
+                         "steps (artifacts land in --metrics-dir or cwd)")
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch]).replace(dtype="float32")
@@ -104,10 +124,32 @@ def main():
         budget = heuristics.suggested_max_prefill_tokens() or 32
     else:
         budget = 8192
-    tel = None
-    if args.metrics_dir or args.trace_out:
-        from repro.obs import Telemetry
-        tel = Telemetry()
+    tel = server = daemon = flight = None
+    need_tel = (args.metrics_dir or args.trace_out
+                or args.metrics_port is not None
+                or args.slo_p95 is not None or args.refit_every is not None)
+    if need_tel:
+        from repro.obs import FlightRecorder, MetricsServer, RefitDaemon, \
+            Telemetry
+        obs_dir = args.metrics_dir or "."
+        # ring mode: the flight recorder wants the LAST N steps at the
+        # breach, not the first N of the run
+        tel = Telemetry(trace_ring=args.slo_p95 is not None,
+                        launch_timing_interval=1 if args.refit_every
+                        else 8)
+        if args.metrics_port is not None:
+            server = MetricsServer(
+                tel, port=args.metrics_port,
+                snapshot_dir=args.metrics_dir,
+                snapshot_interval_s=args.snapshot_interval,
+                arch=args.arch).start()
+            print(f"live metrics: curl {server.url()}")
+        if args.slo_p95 is not None:
+            flight = FlightRecorder(tel, slo_p95_s=args.slo_p95,
+                                    dump_dir=obs_dir)
+        if args.refit_every is not None:
+            daemon = RefitDaemon(tel, out_dir=obs_dir,
+                                 min_new=args.refit_every)
     eng = Engine(cfg, params, max_seqs=4, num_pages=96, max_model_len=256,
                  backend=args.backend,
                  packed_attention=not args.padded,
@@ -116,6 +158,7 @@ def main():
                  max_prefill_tokens=budget,
                  fused_sampling=not args.no_fused_sampling,
                  telemetry=tel,
+                 refit=daemon,
                  tp=args.tp)
     rng = np.random.default_rng(0)
     shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
@@ -125,6 +168,39 @@ def main():
     reqs = make_requests(prompts, max_new_tokens=args.max_new_tokens,
                          temperature=args.temperature)
     t0 = time.perf_counter()
+    steps = 0
+    partial_chunks = 0
+    try:
+        _drive_and_report(args, eng, reqs, tel, daemon, budget, t0)
+    finally:
+        # flush observability artifacts even on Ctrl-C / crash: a
+        # truncated run's grid and trace are exactly what you want to
+        # refit or debug from
+        steps = eng.step_idx
+        if tel is not None and args.metrics_dir:
+            os.makedirs(args.metrics_dir, exist_ok=True)
+            tel.export_prometheus(
+                os.path.join(args.metrics_dir, "metrics.prom"))
+            tel.write_snapshot(
+                os.path.join(args.metrics_dir, "metrics.jsonl"),
+                arch=args.arch, steps=steps)
+            grid_path = os.path.join(args.metrics_dir, "latency_grid.json")
+            tel.export_latency_grid(grid_path)
+            print(f"metrics -> {args.metrics_dir}/ "
+                  f"(refit: python examples/autotune_attn.py "
+                  f"--refit-from {grid_path})")
+        if tel is not None and args.trace_out:
+            tel.export_trace(args.trace_out)
+            print(f"trace -> {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
+        if server is not None:
+            server.stop()
+        if daemon is not None:
+            daemon.stop()
+        heuristics.reset()
+
+
+def _drive_and_report(args, eng, reqs, tel, daemon, budget, t0):
     steps = 0
     partial_chunks = 0
     if args.stream:
@@ -185,23 +261,17 @@ def main():
               f"p95={s['ttft_p95']:.4f}s, itl p50={s['itl_p50']:.4f}s, "
               f"step p50={s['step_p50']:.4f}s, "
               f"padding waste={s['padding_waste']:.1%}")
-        if args.metrics_dir:
-            os.makedirs(args.metrics_dir, exist_ok=True)
-            tel.export_prometheus(
-                os.path.join(args.metrics_dir, "metrics.prom"))
-            tel.write_snapshot(
-                os.path.join(args.metrics_dir, "metrics.jsonl"),
-                arch=args.arch, steps=steps)
-            grid_path = os.path.join(args.metrics_dir, "latency_grid.json")
-            tel.export_latency_grid(grid_path)
-            print(f"metrics -> {args.metrics_dir}/ "
-                  f"(refit: python examples/autotune_attn.py "
-                  f"--refit-from {grid_path})")
-        if args.trace_out:
-            tel.export_trace(args.trace_out)
-            print(f"trace -> {args.trace_out} "
-                  f"(open at https://ui.perfetto.dev)")
-    heuristics.reset()
+        if tel.flight is not None:
+            n = len(tel.flight.dumps)
+            where = f" (last: {tel.flight.dumps[-1]}*)" if n else ""
+            print(f"flight recorder: rolling p95="
+                  f"{tel.flight.rolling_p95() or 0:.4f}s vs SLO "
+                  f"{tel.flight.slo_p95_s:.4f}s, {n} dump(s){where}")
+    if daemon is not None:
+        rep = daemon.report()
+        print(f"online refit: {rep['refits']} refit(s), "
+              f"{rep['swaps']} hot-swap(s) at steps {rep['swap_steps']}"
+              + (f", tree: {rep['last_path']}" if rep['last_path'] else ""))
 
 
 if __name__ == "__main__":

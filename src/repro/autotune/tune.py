@@ -22,6 +22,7 @@ from repro.autotune.microbench import (
     measure, scenario_grid, sweep,
 )
 from repro.core.attention.heuristics import KernelConfig
+from repro.roofline import hw
 
 FEATURES = ("num_seqs", "max_context", "group", "decode_share",
             "avg_query_len", "total_tokens")
@@ -178,10 +179,15 @@ def _cfg_key(cfg: KernelConfig) -> tuple:
     return (cfg.variant, cfg.tile, cfg.num_segments, cfg.block_q)
 
 
+def _median(xs: list[float]) -> float | None:
+    return sorted(xs)[len(xs) // 2] if xs else None
+
+
 def refit_from_telemetry(grid, path_json: str | None = None,
                          path_listing: str | None = None, *,
                          min_count: int = 1, max_depth: int = 3,
-                         min_leaf: int = 2) -> dict:
+                         min_leaf: int = 2,
+                         separate_host_overhead: bool = False) -> dict:
     """Refit the heuristics trees from a serving-telemetry latency grid
     (`obs.Telemetry.latency_grid()` / `export_latency_grid`), closing the
     telemetry→autotune loop: production launches replace the offline
@@ -197,6 +203,19 @@ def refit_from_telemetry(grid, path_json: str | None = None,
     configs outside the base search space are appended to it, so a
     hand-rolled or previously-refit config stays representable.
 
+    Grid entries recorded by a telemetry-enabled engine also carry the
+    executable's XLA cost_analysis (`flops` / `bytes_accessed`).  The
+    roofline terms over those give a device-time floor per observation;
+    `observed - floor` estimates the HOST overhead riding on every
+    launch (dispatch, donation bookkeeping, the timing barrier).  The
+    per-phase median of that estimate is always reported
+    (`host_overhead_s_est`, `device_time_fraction`); with
+    `separate_host_overhead=True` it is additionally folded into the
+    calibration — ratios are fit on `observed - host_overhead` and
+    unobserved configs get `predicted * ratio + host_overhead` — so the
+    model calibrates against device time instead of absorbing a constant
+    host cost into a multiplicative ratio.
+
     `grid` is the dict or a path to its JSON.  Entries with fewer than
     `min_count` warm launches are dropped (single launches are noisy).
     Returns a report; writes a `heuristics.load`-compatible JSON to
@@ -210,6 +229,9 @@ def refit_from_telemetry(grid, path_json: str | None = None,
 
     # phase -> profile(frozen) -> {config key: observed mean seconds}
     by_phase: dict[str, dict[tuple, dict[tuple, float]]] = {}
+    # phase -> [(observed mean, roofline device-time floor)] where the
+    # entry carried cost_analysis numbers
+    dev_points: dict[str, list[tuple[float, float]]] = {}
     for e in grid.get("entries", ()):
         if e["count"] < min_count or e["phase"] not in _PHASE_SPACES:
             continue
@@ -219,6 +241,11 @@ def refit_from_telemetry(grid, path_json: str | None = None,
                c.get("block_q", 16))
         by_phase.setdefault(e["phase"], {}).setdefault(prof, {})[key] = \
             e["mean_s"]
+        flops = e.get("flops") or 0.0
+        nbytes = e.get("bytes_accessed") or 0.0
+        if flops or nbytes:
+            dev = max(flops / hw.PEAK_FLOPS_BF16, nbytes / hw.HBM_BW)
+            dev_points.setdefault(e["phase"], []).append((e["mean_s"], dev))
 
     payload: dict = {"decode_tree": []}
     report: dict = {"phases": {}}
@@ -233,8 +260,16 @@ def refit_from_telemetry(grid, path_json: str | None = None,
                     space.append(KernelConfig(
                         key[0], tile=key[1], num_segments=key[2],
                         block_q=key[3]))
+        # device-vs-host split (diagnostic always; applied on request)
+        points = dev_points.get(phase, ())
+        host_est = _median([max(m - dv, 0.0) for m, dv in points])
+        dev_frac = _median([min(dv / m, 1.0) for m, dv in points if m > 0])
+        host = host_est if separate_host_overhead and host_est else 0.0
         # pass 1: predict every config per profile; collect calibration
-        # ratios where the dispatched config was actually observed
+        # ratios where the dispatched config was actually observed.  With
+        # host separation the ratio is fit on the device-side residual
+        # (floored at 1% of observed so a host-dominated grid can't
+        # collapse the ratio to zero).
         rows, ratios = [], []
         for prof, cfgs in profiles.items():
             sc = scenario_from_profile(dict(prof), arch, phase)
@@ -244,11 +279,12 @@ def refit_from_telemetry(grid, path_json: str | None = None,
             for i, c in enumerate(space):
                 p = pred[i]
                 if _cfg_key(c) in cfgs and math.isfinite(p) and p > 0:
-                    ratios.append(cfgs[_cfg_key(c)] / p)
+                    obs = cfgs[_cfg_key(c)]
+                    ratios.append(max(obs - host, 0.01 * obs) / p)
         ratio = sorted(ratios)[len(ratios) // 2] if ratios else 1.0
         # pass 2: observed where we have it, calibrated model elsewhere
         results = [SweepResult(sc, {
-            i: cfgs.get(_cfg_key(c), pred[i] * ratio)
+            i: cfgs.get(_cfg_key(c), pred[i] * ratio + host)
             for i, c in enumerate(space)})
             for sc, cfgs, pred in rows]
         tree = fit_tree(results, space, max_depth=max_depth,
@@ -258,7 +294,10 @@ def refit_from_telemetry(grid, path_json: str | None = None,
         stats.update(profiles=len(results), space_size=len(space),
                      observed_points=sum(len(c) for c in
                                          profiles.values()),
-                     calibration_ratio=ratio)
+                     calibration_ratio=ratio,
+                     host_overhead_s_est=host_est,
+                     device_time_fraction=dev_frac,
+                     host_overhead_applied_s=host)
         report["phases"][phase] = stats
         listings.append((phase, to_listing(tree, space)))
 

@@ -138,16 +138,15 @@ def _parse_tree(raw_tree) -> list[tuple[dict, KernelConfig]]:
     return [(cond, KernelConfig(**cfg)) for cond, cfg in raw_tree]
 
 
-def load(path: str) -> None:
-    """Install autotune-exported decision trees (JSON: first-match-wins
-    [condition, kernel_config] lists under 'decode_tree' / 'prefill_tree',
-    plus an optional roofline-derived 'suggested_max_prefill_tokens')."""
+def load_payload(raw: dict, source: str = "<payload>") -> None:
+    """Install decision trees from an in-memory payload dict — the hot-
+    swap half of the online refit loop (`obs.refit.RefitDaemon`), and the
+    body of the file-backed `load()`.  Safe to call between engine steps:
+    dispatch re-reads the module globals at every step's pack, and the
+    parse-everything-first discipline keeps a malformed payload from
+    leaving a half-installed tree behind."""
     global _DECODE_TREE, _PREFILL_TREE, _UNIFIED_TREE, _SUGGESTED_CHUNK, \
         _LOADED_PATH
-    with open(path) as f:
-        raw = json.load(f)
-    # parse everything BEFORE assigning any global: a malformed file must
-    # not leave a half-installed tree behind
     decode_tree = _parse_tree(raw["decode_tree"])
     prefill_tree = (_parse_tree(raw["prefill_tree"])
                     if raw.get("prefill_tree") else None)
@@ -157,11 +156,20 @@ def load(path: str) -> None:
     _PREFILL_TREE = prefill_tree
     _UNIFIED_TREE = unified_tree
     _SUGGESTED_CHUNK = raw.get("suggested_max_prefill_tokens")
-    _LOADED_PATH = path
+    _LOADED_PATH = source
     log.info("attention heuristics loaded from %s (%d decode leaves, "
-             "%d prefill leaves, %d unified leaves)", path,
+             "%d prefill leaves, %d unified leaves)", source,
              len(_DECODE_TREE), len(_PREFILL_TREE or ()),
              len(_UNIFIED_TREE or ()))
+
+
+def load(path: str) -> None:
+    """Install autotune-exported decision trees (JSON: first-match-wins
+    [condition, kernel_config] lists under 'decode_tree' / 'prefill_tree',
+    plus an optional roofline-derived 'suggested_max_prefill_tokens')."""
+    with open(path) as f:
+        raw = json.load(f)
+    load_payload(raw, source=path)
 
 
 def loaded_path() -> str | None:

@@ -7,15 +7,19 @@ import it; see docs/observability.md for the metric/trace/refit schema.
 from .clock import Clock, FakeClock, PerfCounterClock
 from .metrics import (
     LATENCY_BUCKETS_S, TOKEN_BUCKETS, Counter, Gauge, Histogram, Registry,
-    pow2_buckets,
+    parse_prometheus, pow2_buckets,
 )
+from .refit import RefitDaemon
+from .server import MetricsServer
 from .telemetry import Telemetry
-from .tracing import RequestRecord, RequestTracker, Tracer
+from .tracing import FlightRecorder, RequestRecord, RequestTracker, Tracer
 
 __all__ = [
     "Clock", "FakeClock", "PerfCounterClock",
     "Counter", "Gauge", "Histogram", "Registry", "pow2_buckets",
+    "parse_prometheus",
     "LATENCY_BUCKETS_S", "TOKEN_BUCKETS",
-    "Tracer", "RequestTracker", "RequestRecord",
+    "Tracer", "RequestTracker", "RequestRecord", "FlightRecorder",
+    "MetricsServer", "RefitDaemon",
     "Telemetry",
 ]

@@ -23,13 +23,19 @@ Design points:
   it.
 
 The registry is engine-thread-local by design (the serving loop is a
-single host thread); there is deliberately no locking.
+single host thread); there is deliberately no locking.  The one
+concurrent READER is the scrape thread (`obs.server`): exports iterate
+materialized copies (`sorted(...)`, `list(...)`) of the family/series
+dicts, which the GIL makes safe against the engine's inserts — a scrape
+racing a step can observe a histogram whose `sum` is one observation
+ahead of a bucket count, never a crash.
 """
 from __future__ import annotations
 
 import bisect
 import json
 import math
+import re
 
 
 def pow2_buckets(lo: float, hi: float) -> tuple[float, ...]:
@@ -58,9 +64,86 @@ def fmt_float(v: float) -> str:
     return repr(float(v))
 
 
-def _escape(value: str) -> str:
+def _escape_label(value: str) -> str:
+    """Label-value escaping: backslash, double-quote, newline (in that
+    order — backslash first so the others aren't double-escaped)."""
     return (str(value).replace("\\", "\\\\").replace('"', '\\"')
             .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    """HELP-text escaping: the exposition format escapes only backslash
+    and newline there (quotes are legal verbatim)."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _unescape(s: str) -> str:
+    out, i = [], 0
+    while i < len(s):
+        c = s[i]
+        if c == "\\" and i + 1 < len(s):
+            out.append({"n": "\n", '"': '"', "\\": "\\"}
+                       .get(s[i + 1], "\\" + s[i + 1]))
+            i += 2
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+_SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>.*)\})?'
+    r' (?P<value>[+-]?(?:[0-9]*\.?[0-9]+(?:[eE][+-]?[0-9]+)?|Inf|NaN))$')
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_prometheus(text: str) -> dict:
+    """Parse exposition-format text back into
+    ``{family: {"type","help","samples": [(name, labels, value)]}}``.
+
+    Strict on sample-line syntax (raises ValueError on a malformed line)
+    so it doubles as the conformance check in tests and the endpoint
+    smoke; samples are filed under their family (``_bucket``/``_sum``/
+    ``_count`` suffixes map back to the histogram's ``# TYPE`` name)."""
+    fams: dict[str, dict] = {}
+    last_typed = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            _, _, rest = line.partition("# HELP ")
+            name, _, help_txt = rest.partition(" ")
+            fams.setdefault(name, {"type": "untyped", "help": "",
+                                   "samples": []})
+            fams[name]["help"] = _unescape(help_txt)
+            continue
+        if line.startswith("# TYPE "):
+            _, _, rest = line.partition("# TYPE ")
+            name, _, kind = rest.partition(" ")
+            fams.setdefault(name, {"type": "untyped", "help": "",
+                                   "samples": []})
+            fams[name]["type"] = kind.strip()
+            last_typed = name
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"malformed exposition sample line: {line!r}")
+        name = m.group("name")
+        raw = m.group("labels")
+        labels = ({k: _unescape(v) for k, v in _LABEL_RE.findall(raw)}
+                  if raw else {})
+        value = float(m.group("value").replace("Inf", "inf"))
+        fam = name
+        if (last_typed and fams.get(last_typed, {}).get("type") == "histogram"
+                and name in (f"{last_typed}_bucket", f"{last_typed}_sum",
+                             f"{last_typed}_count")):
+            fam = last_typed
+        fams.setdefault(fam, {"type": "untyped", "help": "", "samples": []})
+        fams[fam]["samples"].append((name, labels, value))
+    return fams
 
 
 class _Family:
@@ -269,7 +352,7 @@ class Registry:
         lines = []
         for name, fam in sorted(self._families.items()):
             if fam.help:
-                lines.append(f"# HELP {name} {_escape(fam.help)}")
+                lines.append(f"# HELP {name} {_escape_help(fam.help)}")
             lines.append(f"# TYPE {name} {fam.kind}")
             for key in sorted(fam._series):
                 labels = fam._label_dict(key)
@@ -292,5 +375,5 @@ class Registry:
 def _render_labels(labels: dict) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{_escape(v)}"' for k, v in labels.items())
+    inner = ",".join(f'{k}="{_escape_label(v)}"' for k, v in labels.items())
     return "{" + inner + "}"

@@ -38,6 +38,10 @@ class _LaunchStat:
     total: float = 0.0
     min: float = float("inf")
     max: float = 0.0
+    # device-side cost of the executable behind this grid key (XLA
+    # cost_analysis, stamped once at capture); None when unavailable
+    flops: float | None = None
+    bytes: float | None = None
 
     def add(self, dt: float) -> None:
         self.count += 1
@@ -49,7 +53,8 @@ class _LaunchStat:
 class Telemetry:
     def __init__(self, *, clock: Clock | None = None,
                  trace_capacity: int = 500_000, max_series: int = 512,
-                 launch_timing_interval: int = 8):
+                 launch_timing_interval: int = 8,
+                 trace_ring: bool = False):
         self.clock = clock or PerfCounterClock()
         # Precise launch timing needs a block_until_ready barrier, which
         # costs the host/device overlap between launch and the sample
@@ -59,8 +64,12 @@ class Telemetry:
         self.launch_timing_interval = max(int(launch_timing_interval), 1)
         self._launch_tick = 0
         self.metrics = Registry(max_series_per_family=max_series)
-        self.tracer = Tracer(clock=self.clock, capacity=trace_capacity)
+        self.tracer = Tracer(clock=self.clock, capacity=trace_capacity,
+                             ring=trace_ring)
         self.requests = RequestTracker(self.metrics, self.tracer, self.clock)
+        # the SLO flight recorder self-registers here (obs.tracing); when
+        # set, record_step feeds it every step duration
+        self.flight = None
         # model/arch geometry stamped into the latency-grid export so the
         # refit can rebuild cost-model scenarios for unobserved configs
         self._arch: dict = {}
@@ -132,6 +141,10 @@ class Telemetry:
             "repro_cache_hit_tokens_total",
             "Prompt tokens served from the prefix cache.")
         self._steps_c = m.counter("repro_steps_total", "Engine steps run.")
+        self._trace_dropped_g = m.gauge(
+            "repro_trace_dropped_events",
+            "Trace events dropped (bounded buffer) or overwritten (ring "
+            "buffer) so far.")
 
     # -- arch geometry (for the refit loop) ----------------------------
 
@@ -168,13 +181,17 @@ class Telemetry:
     def record_launch(self, kind: str, profile, kcfg, t0: float, t1: float,
                       *, compiled: bool, tokens: int,
                       grid_phase: str | None = None,
-                      timed: bool = True) -> None:
+                      timed: bool = True,
+                      cost: dict | None = None) -> None:
         """One model launch: `kind` is the executable-cache kind string,
         `profile`/`kcfg` the dispatch inputs/outputs (None when dispatch
         is disabled).  When `timed`, [t0, t1] brackets launch +
         block_until_ready and feeds the latency histograms/grid; untimed
         launches only count (their device wait lands in the sample
-        phase)."""
+        phase).  `cost` optionally carries the executable's XLA
+        cost_analysis (`{"flops", "bytes_accessed"}`), stamped onto the
+        grid entry so the refit can separate host overhead from device
+        time."""
         dt = t1 - t0
         if compiled:
             self._compile_c.inc(kind=kind)
@@ -195,6 +212,11 @@ class Telemetry:
         if stat is None:
             stat = self._grid[key] = _LaunchStat()
         stat.add(dt)
+        if cost and stat.flops is None:
+            # first-seen wins: one grid key can aggregate launches from
+            # adjacent token buckets, whose costs differ only by padding
+            stat.flops = float(cost.get("flops") or 0.0)
+            stat.bytes = float(cost.get("bytes_accessed") or 0.0)
 
     def record_dispatch(self, phase: str, variant: str) -> None:
         self._dispatch_c.inc(phase=phase, variant=variant)
@@ -242,6 +264,9 @@ class Telemetry:
         self._last_slots = slots
         if slots:
             self._padding_g.set(1.0 - self._useful_tokens / slots)
+        self._trace_dropped_g.set(self.tracer.dropped)
+        if self.flight is not None:
+            self.flight.observe_step(t1 - t0, step_idx=engine.step_idx)
 
     # -- scheduler / cache events -------------------------------------
 
@@ -256,11 +281,23 @@ class Telemetry:
 
     # -- exports -------------------------------------------------------
 
+    def grid_counts(self) -> dict[tuple, int]:
+        """Warm-launch observation counts per (phase, profile) bucket —
+        the refit daemon's watch signal for 'enough NEW observations'."""
+        out: dict[tuple, int] = {}
+        for (phase, prof, _cfg), st in list(self._grid.items()):
+            key = (phase, prof)
+            out[key] = out.get(key, 0) + st.count
+        return out
+
     def latency_grid(self) -> dict:
         """Observed launch latencies keyed by (phase, profile, config) in
         the shape `autotune.tune.refit_from_telemetry` consumes."""
         entries = []
-        for (phase, prof, cfg), st in sorted(self._grid.items()):
+        # repr-key the sort: config tuples mix None and int tiles (e.g.
+        # after a mid-run tree hot-swap), which tuple < cannot order
+        for (phase, prof, cfg), st in sorted(list(self._grid.items()),
+                                             key=lambda kv: repr(kv[0])):
             entries.append({
                 "phase": phase,
                 "profile": dict(zip(
@@ -275,6 +312,8 @@ class Telemetry:
                 "mean_s": st.total / st.count,
                 "min_s": st.min,
                 "max_s": st.max,
+                "flops": st.flops,
+                "bytes_accessed": st.bytes,
             })
         return {"version": 1, "arch": dict(self._arch), "entries": entries}
 
@@ -301,4 +340,9 @@ class Telemetry:
         out["step_p50"] = self._step_h.quantile(0.5)
         out["step_p95"] = self._step_h.quantile(0.95)
         out["padding_waste"] = self._padding_g.value()
+        out["trace_dropped_events"] = self.tracer.dropped
+        if self.flight is not None:
+            out["slo_dumps"] = len(self.flight.dumps)
+            out["slo_last_dump"] = (self.flight.dumps[-1]
+                                    if self.flight.dumps else None)
         return out

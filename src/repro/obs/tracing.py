@@ -1,6 +1,6 @@
-"""Step timelines and request lifecycle tracing.
+"""Step timelines, request lifecycle tracing, and the SLO flight recorder.
 
-Two layers:
+Three layers:
 
 * `Tracer` — a bounded in-memory buffer of Chrome/Perfetto trace events
   (the `chrome://tracing` / https://ui.perfetto.dev JSON array format).
@@ -15,6 +15,13 @@ Two layers:
   attached, emits one "X" event per finished request on its own
   `req-<id>` track so request lifetimes can be eyeballed against step
   spans in the same Perfetto view.
+* `FlightRecorder` — the always-on crash-dump analog for latency: with
+  the tracer in ring mode (`ring=True`, newest events overwrite oldest)
+  the buffer always holds the *most recent* window of the run, and the
+  recorder watches a rolling p95 of step latency against an SLO.  On
+  breach it dumps the ring trace + a metrics snapshot once, then stays
+  latched until the p95 recovers — a sustained incident yields one
+  bounded dump, not a dump per step.
 
 All timestamps come from an injectable `Clock` (default
 `time.perf_counter`), so lifecycle math is exactly testable with a
@@ -22,12 +29,18 @@ All timestamps come from an injectable `Clock` (default
 """
 from __future__ import annotations
 
+import collections
 import json
+import logging
+import math
+import os
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 
 from .clock import Clock, PerfCounterClock
 from .metrics import LATENCY_BUCKETS_S, Registry
+
+log = logging.getLogger(__name__)
 
 
 class Tracer:
@@ -35,18 +48,28 @@ class Tracer:
 
     Events use the "trace event format": complete events (`ph: "X"`) with
     `ts`/`dur` in microseconds, grouped by `(pid, tid)`; named tracks are
-    realized as thread-name metadata events (`ph: "M"`).  Once `capacity`
-    events are buffered, further events are dropped and counted — a long
-    serving run degrades to a truncated trace, never to unbounded memory.
+    realized as thread-name metadata events (`ph: "M"`).  Two overflow
+    policies, both bounded (a long serving run degrades to a truncated
+    trace, never to unbounded memory) and both counting `dropped`:
+
+    * default (`ring=False`): once `capacity` events are buffered,
+      further events are DROPPED — the buffer keeps the *start* of the
+      run (good for one-shot export).
+    * `ring=True`: the buffer keeps the *last* `capacity` events, newest
+      overwriting oldest — the flight-recorder mode, where the tail of
+      the run is the part worth dumping on an SLO breach.
     """
 
     def __init__(self, clock: Clock | None = None, capacity: int = 500_000,
-                 pid: int = 1, process_name: str = "repro-serving"):
+                 pid: int = 1, process_name: str = "repro-serving",
+                 ring: bool = False):
         self.clock = clock or PerfCounterClock()
         self.capacity = capacity
         self.pid = pid
+        self.ring = ring
         self.dropped = 0
-        self._events: list[dict] = []
+        self._events: "list[dict] | collections.deque[dict]" = (
+            collections.deque(maxlen=capacity) if ring else [])
         self._meta: list[dict] = [{
             "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
             "args": {"name": process_name},
@@ -66,9 +89,16 @@ class Tracer:
 
     def _push(self, ev: dict) -> None:
         if len(self._events) >= self.capacity:
+            if self.dropped == 0:
+                log.warning(
+                    "trace buffer saturated at %d events (%s); see "
+                    "repro_trace_dropped_events / summary()",
+                    self.capacity,
+                    "overwriting oldest" if self.ring else "dropping new")
             self.dropped += 1
-            return
-        self._events.append(ev)
+            if not self.ring:
+                return
+        self._events.append(ev)  # ring: deque evicts the oldest event
 
     def complete(self, name: str, t0: float, t1: float,
                  track: str = "engine", **args) -> None:
@@ -103,7 +133,7 @@ class Tracer:
         return list(self._events)
 
     def to_json(self) -> dict:
-        return {"traceEvents": self._meta + self._events,
+        return {"traceEvents": self._meta + list(self._events),
                 "displayTimeUnit": "ms"}
 
     def export(self, path: str) -> None:
@@ -270,3 +300,83 @@ class RequestTracker:
             out[f"{name}_p50"] = hist.quantile(0.5)
             out[f"{name}_p95"] = hist.quantile(0.95)
         return out
+
+
+class FlightRecorder:
+    """Rolling p95 step-latency SLO guard with a one-shot breach dump.
+
+    Self-registers on `telemetry` (`telemetry.flight = self`), which then
+    feeds every step duration into `observe_step`.  Over the last
+    `window` steps a p95 is maintained; once at least `min_steps`
+    durations are buffered and the p95 exceeds `slo_p95_s`, the recorder
+    dumps the trace buffer (last-N-steps when the telemetry was built
+    with `trace_ring=True`) plus one metrics-snapshot line to
+    `dump_dir/slo_dump_<k>_{trace.json,metrics.jsonl}` and LATCHES:
+    no further dump until the rolling p95 recovers below
+    `rearm_ratio * slo_p95_s`.  A sustained breach therefore produces
+    exactly one bounded dump, a healthy run none.
+    """
+
+    def __init__(self, telemetry, *, slo_p95_s: float, dump_dir: str,
+                 window: int = 64, min_steps: int = 16,
+                 rearm_ratio: float = 0.8):
+        assert slo_p95_s > 0 and 0 < rearm_ratio <= 1.0
+        self.telemetry = telemetry
+        self.slo_p95_s = float(slo_p95_s)
+        self.dump_dir = dump_dir
+        self.window = int(window)
+        self.min_steps = max(int(min_steps), 1)
+        self.rearm_ratio = float(rearm_ratio)
+        self.dumps: list[str] = []  # dump path prefixes, oldest first
+        self._durs: collections.deque[float] = collections.deque(
+            maxlen=self.window)
+        self._armed = True
+        m = telemetry.metrics
+        self._p95_g = m.gauge(
+            "repro_step_p95_rolling_seconds",
+            "Rolling p95 step latency over the flight-recorder window.")
+        self._dumps_c = m.counter(
+            "repro_slo_dumps_total",
+            "Flight-recorder dumps triggered by a p95 SLO breach.")
+        telemetry.flight = self
+
+    def rolling_p95(self) -> float | None:
+        if not self._durs:
+            return None
+        xs = sorted(self._durs)
+        return xs[min(math.ceil(0.95 * len(xs)) - 1, len(xs) - 1)]
+
+    def observe_step(self, dt: float, step_idx: int | None = None) \
+            -> str | None:
+        """One step duration; returns the dump path prefix on breach."""
+        self._durs.append(dt)
+        p95 = self.rolling_p95()
+        self._p95_g.set(p95)
+        if len(self._durs) < self.min_steps:
+            return None
+        if not self._armed:
+            if p95 <= self.rearm_ratio * self.slo_p95_s:
+                self._armed = True
+            return None
+        if p95 <= self.slo_p95_s:
+            return None
+        return self._dump(p95, step_idx)
+
+    def _dump(self, p95: float, step_idx: int | None) -> str:
+        self._armed = False
+        os.makedirs(self.dump_dir, exist_ok=True)
+        prefix = os.path.join(self.dump_dir,
+                              f"slo_dump_{len(self.dumps):03d}")
+        self.telemetry.tracer.instant(
+            "slo_breach", track="engine", p95_s=p95, slo_s=self.slo_p95_s,
+            step=step_idx)
+        self.telemetry.export_trace(prefix + "_trace.json")
+        self.telemetry.write_snapshot(
+            prefix + "_metrics.jsonl", reason="slo_p95_breach",
+            p95_s=p95, slo_s=self.slo_p95_s, step=step_idx)
+        self._dumps_c.inc()
+        self.dumps.append(prefix)
+        log.warning("step p95 %.6fs breached SLO %.6fs at step %s; "
+                    "flight-recorder dump -> %s_{trace.json,metrics.jsonl}",
+                    p95, self.slo_p95_s, step_idx, prefix)
+        return prefix

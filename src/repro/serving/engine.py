@@ -100,6 +100,7 @@ and cumulatively in `Engine.dispatch_counts`.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import logging
@@ -171,6 +172,7 @@ class Engine:
         enable_chunked_prefill: bool = False,
         seed: int = 0,
         telemetry=None,
+        refit=None,
         tp: int = 1,
     ):
         self.cfg = cfg
@@ -180,6 +182,14 @@ class Engine:
         # AND the block_until_ready timing barriers — the serving loop
         # stays exactly as asynchronous as before.
         self.telemetry = telemetry
+        # obs.RefitDaemon | None: after every finished step the engine
+        # applies any pending heuristics hot-swap (and, in the daemon's
+        # inline mode, evaluates its refit trigger) — swaps only ever
+        # happen BETWEEN steps, so a step never sees two trees.
+        self.refit = refit
+        if refit is not None:
+            assert telemetry is not None and refit.telemetry is telemetry, \
+                "refit daemon must watch this engine's telemetry"
         if telemetry is not None:
             telemetry.set_arch(
                 num_q_heads=cfg.num_q_heads,
@@ -288,6 +298,9 @@ class Engine:
         self.last_step_logits = None  # device [S, V], debug_logits only
         self.last_generate: dict = {}  # drive-loop stats (see generate())
         self._compiled: dict[tuple, object] = {}
+        # executable-cache key -> {"flops", "bytes_accessed"} | None:
+        # XLA cost_analysis stamped once per capture (telemetry only)
+        self._launch_costs: dict[tuple, dict | None] = {}
 
     # ------------------------------------------------------------------
     # compiled executables ("graphs")
@@ -337,6 +350,47 @@ class Engine:
             else:
                 raise ValueError(kind)
         return self._compiled[key]
+
+    # ------------------------------------------------------------------
+    # device-side timing (telemetry only)
+    # ------------------------------------------------------------------
+
+    def _launch_ctx(self, kind: str, tokens: int):
+        """jax.profiler annotation around a launch so a device profile
+        (`jax.profiler.start_trace`) attributes device time to the
+        executable kind; a no-op without telemetry."""
+        if self.telemetry is None:
+            return contextlib.nullcontext()
+        try:
+            return jax.profiler.TraceAnnotation(
+                f"repro.launch.{kind}", tokens=tokens, tp=self.tp)
+        except Exception:  # noqa: BLE001 — annotation is best-effort
+            return contextlib.nullcontext()
+
+    def _exe_cost(self, key: tuple, fn, *args) -> dict | None:
+        """Best-effort XLA cost_analysis (flops / bytes accessed) of the
+        executable behind `key`, memoized per executable-cache key.  The
+        AOT lower+compile runs once per CAPTURE (after the launch was
+        recorded, so it never pollutes launch timing) and lets warm
+        launches stamp device-side cost into the latency grid — the refit
+        can then split observed latency into a device-time floor and host
+        overhead (`tune.refit_from_telemetry(separate_host_overhead=...)`)."""
+        if key not in self._launch_costs:
+            cost = None
+            try:
+                ca = fn.lower(*args).compile().cost_analysis()
+                if isinstance(ca, (list, tuple)):  # jax < 0.5 returns a list
+                    ca = ca[0] if ca else {}
+                if ca:
+                    cost = {
+                        "flops": float(ca.get("flops", 0.0) or 0.0),
+                        "bytes_accessed":
+                            float(ca.get("bytes accessed", 0.0) or 0.0),
+                    }
+            except Exception as e:  # noqa: BLE001 — cost analysis is optional
+                log.debug("cost_analysis unavailable for %s: %s", key[0], e)
+            self._launch_costs[key] = cost
+        return self._launch_costs[key]
 
     # ------------------------------------------------------------------
     # kernel-config dispatch (paper Fig. 5: profile -> tree -> config)
@@ -663,6 +717,9 @@ class Engine:
             tel.record_phase("host", t_host, t_end)
             tel.record_step(t0=flight.t0, t1=t_end, decision=flight.dec,
                             stats=stats, engine=self)
+        if self.refit is not None:  # hot-swap boundary (obs.refit)
+            self.refit.on_step(self)
+            stats["refit_swaps"] = self.refit.swaps
         self.step_idx += 1
         self.last_step_stats = stats
         return stats
@@ -703,6 +760,9 @@ class Engine:
             tel.record_phase("host", t_host, t_end)
             tel.record_step(t0=flight.t0, t1=t_end, decision=flight.dec,
                             stats=stats, engine=self)
+        if self.refit is not None:  # hot-swap boundary (obs.refit)
+            self.refit.on_step(self)
+            stats["refit_swaps"] = self.refit.swaps
         self.step_idx += 1
         self.last_step_stats = stats
         return stats
@@ -875,11 +935,14 @@ class Engine:
         transferring it to the host."""
         tel = self.telemetry
         pre_captures = len(self.compile_events)
+        exe_key = ("unified", 2 * self.max_seqs, pack.tokens, pack.kcfg)
         fn = self._get_fn("unified", 2 * self.max_seqs, pack.tokens,
                           pack.kcfg)
         self.device_calls["unified"] += 1
+        cache_in = self.cache
         t_launch = tel.clock.now() if tel else 0.0
-        ret = fn(self.params, self.cache, batch)
+        with self._launch_ctx("unified", pack.tokens):
+            ret = fn(self.params, cache_in, batch)
         if self._fused and self._debug_logits:
             out, self.last_step_logits, new_cache = ret
         else:
@@ -892,7 +955,10 @@ class Engine:
             tel.record_launch(
                 "unified", pack.profile, pack.kcfg, t_launch,
                 tel.clock.now(), compiled=compiled, tokens=pack.tokens,
-                grid_phase="unified", timed=timed)
+                grid_phase="unified", timed=timed,
+                cost=self._launch_costs.get(exe_key))
+            if compiled:  # AFTER record_launch: never pollutes timing
+                self._exe_cost(exe_key, fn, self.params, cache_in, batch)
         self.cache = new_cache
         self.launched_token_slots += pack.tokens
         return out
@@ -976,6 +1042,7 @@ class Engine:
         profile = self._prefill_profile(reqs)
         kcfg = self._dispatch("prefill", profile)
         pre_captures = len(self.compile_events)
+        exe_key = ("prefill", b, s, kcfg)
         fn = self._get_fn("prefill", b, s, kcfg)
         self.device_calls["prefill"] += 1
         batch = {
@@ -988,7 +1055,8 @@ class Engine:
         if tel:
             t_launch = tel.clock.now()
             tel.record_phase("pack", t_pack, t_launch, tokens=b * s)
-        logits, new_cache = fn(self.params, cache_in, batch)
+        with self._launch_ctx("prefill", b * s):
+            logits, new_cache = fn(self.params, cache_in, batch)
         if tel:
             compiled = len(self.compile_events) > pre_captures
             timed = compiled or tel.time_this_launch()
@@ -997,7 +1065,9 @@ class Engine:
             tel.record_launch(
                 "prefill", profile, kcfg, t_launch, tel.clock.now(),
                 compiled=compiled, tokens=b * s, grid_phase="prefill",
-                timed=timed)
+                timed=timed, cost=self._launch_costs.get(exe_key))
+            if compiled:
+                self._exe_cost(exe_key, fn, self.params, cache_in, batch)
         self.launched_token_slots += b * s
         self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
         self._finish_chunk(reqs, logits)
@@ -1036,6 +1106,7 @@ class Engine:
         profile = self._prefill_profile(reqs)
         kcfg = self._dispatch("prefill_cached", profile)
         pre_captures = len(self.compile_events)
+        exe_key = (f"prefill_cached/np{np_b}", b, s, kcfg)
         fn = self._get_fn(f"prefill_cached/np{np_b}", b, s, kcfg)
         self.device_calls["prefill_cached"] += 1
         batch = {
@@ -1048,7 +1119,8 @@ class Engine:
         if tel:
             t_launch = tel.clock.now()
             tel.record_phase("pack", t_pack, t_launch, tokens=b * s)
-        logits, new_cache = fn(self.params, cache_in, batch)
+        with self._launch_ctx("prefill_cached", b * s):
+            logits, new_cache = fn(self.params, cache_in, batch)
         if tel:
             compiled = len(self.compile_events) > pre_captures
             timed = compiled or tel.time_this_launch()
@@ -1057,7 +1129,9 @@ class Engine:
             tel.record_launch(
                 "prefill_cached", profile, kcfg, t_launch, tel.clock.now(),
                 compiled=compiled, tokens=b * s, grid_phase="prefill",
-                timed=timed)
+                timed=timed, cost=self._launch_costs.get(exe_key))
+            if compiled:
+                self._exe_cost(exe_key, fn, self.params, cache_in, batch)
         self.launched_token_slots += b * s
         self._merge_prefill_cache(new_cache, [r.slot for r in reqs])
         self._finish_chunk(reqs, logits)
@@ -1078,8 +1152,10 @@ class Engine:
         profile = self._decode_profile(reqs)
         kcfg = self._dispatch("decode", profile)
         pre_captures = len(self.compile_events)
+        exe_key = ("decode", b, 1, kcfg)
         fn = self._get_fn("decode", b, 1, kcfg)
         self.device_calls["decode"] += 1
+        cache_in = self.cache
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),
@@ -1089,7 +1165,8 @@ class Engine:
         if tel:
             t_launch = tel.clock.now()
             tel.record_phase("pack", t_pack, t_launch, tokens=b)
-        logits, new_cache = fn(self.params, self.cache, batch)
+        with self._launch_ctx("decode", b):
+            logits, new_cache = fn(self.params, cache_in, batch)
         if tel:
             compiled = len(self.compile_events) > pre_captures
             timed = compiled or tel.time_this_launch()
@@ -1097,7 +1174,10 @@ class Engine:
                 jax.block_until_ready(logits)
             tel.record_launch(
                 "decode", profile, kcfg, t_launch, tel.clock.now(),
-                compiled=compiled, tokens=b, timed=timed)
+                compiled=compiled, tokens=b, timed=timed,
+                cost=self._launch_costs.get(exe_key))
+            if compiled:
+                self._exe_cost(exe_key, fn, self.params, cache_in, batch)
         self.cache = new_cache
         self.launched_token_slots += b
         t_sample = tel.clock.now() if tel else 0.0

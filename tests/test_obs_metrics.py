@@ -12,7 +12,7 @@ from types import SimpleNamespace
 import pytest
 
 from repro.obs import (FakeClock, Registry, RequestTracker, Telemetry,
-                       Tracer, pow2_buckets)
+                       Tracer, parse_prometheus, pow2_buckets)
 from repro.obs.metrics import fmt_float
 
 
@@ -341,3 +341,203 @@ def test_latency_grid_excludes_compiles_and_aggregates():
     assert e["profile"]["total_tokens"] == 32
     assert e["config"] == {"variant": "fused", "tile": 128,
                            "num_segments": 1, "block_q": 16}
+
+
+def test_latency_grid_carries_launch_cost():
+    """XLA cost_analysis rides into the grid (first-seen-wins) so the
+    refit can separate host overhead from device time."""
+    tel = Telemetry()
+    p, k = _Profile(), _KCFG
+    tel.record_launch("unified", p, k, 0.0, 0.2, compiled=False, tokens=32)
+    tel.record_launch("unified", p, k, 0.0, 0.3, compiled=False, tokens=32,
+                      cost={"flops": 1e9, "bytes_accessed": 2e6})
+    tel.record_launch("unified", p, k, 0.0, 0.4, compiled=False, tokens=32,
+                      cost={"flops": 9e9, "bytes_accessed": 9e6})  # ignored
+    [e] = tel.latency_grid()["entries"]
+    assert e["count"] == 3
+    assert e["flops"] == pytest.approx(1e9)
+    assert e["bytes_accessed"] == pytest.approx(2e6)
+    assert tel.grid_counts() == {("unified", dataclasses.astuple(p)): 3}
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition conformance (text format v0.0.4)
+# ---------------------------------------------------------------------------
+
+
+def test_label_escaping_conformance():
+    """Label values escape backslash, double-quote and newline — and
+    escape backslashes FIRST, so a literal `\\n` in a value does not
+    collapse with a real newline's `\\n` escape."""
+    r = Registry()
+    c = r.counter("esc_total", "t", labelnames=("v",))
+    tricky = 'back\\slash "quoted"\nnewline and a literal \\n'
+    c.inc(5, v=tricky)
+    text = r.render_prometheus()
+    line = next(ln for ln in text.splitlines()
+                if ln.startswith("esc_total{"))
+    assert line == ('esc_total{v="back\\\\slash \\"quoted\\"\\nnewline '
+                    'and a literal \\\\n"} 5')
+    # the escaped line is single-line (the raw newline never leaks)
+    assert "\n" not in line
+    # and unescaping round-trips exactly
+    fam = parse_prometheus(text)["esc_total"]
+    [(_, labels, value)] = fam["samples"]
+    assert labels == {"v": tricky}
+    assert value == 5.0
+
+
+def test_help_escaping_conformance():
+    """HELP text escapes only backslash and newline; double quotes are
+    legal verbatim in HELP (unlike label values)."""
+    r = Registry()
+    r.gauge("g", 'help with "quotes", a \\ and\na newline').set(1)
+    text = r.render_prometheus()
+    help_line = next(ln for ln in text.splitlines()
+                     if ln.startswith("# HELP g "))
+    assert help_line == ('# HELP g help with "quotes", a \\\\ and\\n'
+                         'a newline')
+    assert parse_prometheus(text)["g"]["help"] == \
+        'help with "quotes", a \\ and\na newline'
+
+
+def test_histogram_exposition_contract():
+    """The histogram sample contract scrapers rely on: cumulative
+    `le`-bucket counts ending in an `+Inf` bucket that equals `_count`,
+    plus `_sum`, all in the same family."""
+    r = Registry()
+    h = r.histogram("lat_seconds", "lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 3.0):
+        h.observe(v)
+    fam = parse_prometheus(r.render_prometheus())["lat_seconds"]
+    assert fam["type"] == "histogram"
+    buckets = {labels["le"]: value for name, labels, value in fam["samples"]
+               if name == "lat_seconds_bucket"}
+    [count] = [v for n, _, v in fam["samples"] if n == "lat_seconds_count"]
+    [total] = [v for n, _, v in fam["samples"] if n == "lat_seconds_sum"]
+    assert buckets == {"0.1": 1.0, "1": 2.0, "+Inf": 3.0}
+    # cumulative: monotone in le order, +Inf bucket == _count
+    assert buckets["0.1"] <= buckets["1"] <= buckets["+Inf"] == count == 3.0
+    assert total == pytest.approx(3.55)
+
+
+def test_parse_prometheus_roundtrip_full_registry():
+    """render -> parse -> every sample matches the registry's state."""
+    r = _populated_registry()
+    fams = parse_prometheus(r.render_prometheus())
+    assert set(fams) == {"repro_hits_total", "repro_depth",
+                         "repro_lat_seconds"}
+    assert fams["repro_hits_total"]["type"] == "counter"
+    [(_, labels, value)] = fams["repro_hits_total"]["samples"]
+    assert labels == {"kind": 'we"ird\nlabel'} and value == 3.0
+    assert fams["repro_depth"]["samples"] == [("repro_depth", {}, 7.0)]
+    got = {(n, labels.get("le")): v for n, labels, v
+           in fams["repro_lat_seconds"]["samples"]}
+    want = r.families()["repro_lat_seconds"].get()
+    assert got[("repro_lat_seconds_count", None)] == want["count"]
+    assert got[("repro_lat_seconds_sum", None)] == want["sum"]
+    for le, n in want["buckets"].items():
+        assert got[("repro_lat_seconds_bucket", le)] == n
+
+
+def test_parse_prometheus_rejects_malformed():
+    parse_prometheus("ok_total 1\n")  # baseline: this parses
+    for bad in ("no_value\n", 'unclosed{a="b 1\n', "name 1 2 3 extra\n"):
+        with pytest.raises(ValueError):
+            parse_prometheus(bad)
+
+
+# ---------------------------------------------------------------------------
+# tracer ring mode + flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_ring_mode_keeps_tail():
+    tr = Tracer(capacity=3, ring=True)
+    for i in range(5):
+        tr.complete(f"e{i}", float(i), float(i) + 1.0)
+    assert len(tr) == 3
+    assert tr.dropped == 2  # overwrites are counted like drops
+    assert [e["name"] for e in tr.events()] == ["e2", "e3", "e4"]
+    # to_json keeps metadata even after eviction
+    assert tr.to_json()["traceEvents"][0]["name"] == "process_name"
+
+
+def test_telemetry_surfaces_dropped_trace_events():
+    tel = Telemetry(trace_ring=True, trace_capacity=2)
+    for i in range(5):
+        tel.tracer.complete(f"e{i}", 0.0, 1.0)
+    assert tel.tracer.dropped == 3
+    assert tel.summary()["trace_dropped_events"] == 3  # ring overwrites
+    bounded = Telemetry(trace_capacity=2)
+    for i in range(5):
+        bounded.tracer.complete(f"e{i}", 0.0, 1.0)
+    assert bounded.summary()["trace_dropped_events"] == 3  # dropped new
+
+
+def _flight(tmp_path, **kw):
+    from repro.obs import FlightRecorder
+    tel = Telemetry(clock=FakeClock(), trace_ring=True)
+    kw.setdefault("slo_p95_s", 1.0)
+    kw.setdefault("window", 8)
+    kw.setdefault("min_steps", 4)
+    fr = FlightRecorder(tel, dump_dir=str(tmp_path), **kw)
+    assert tel.flight is fr  # self-registers for record_step feeding
+    return tel, fr
+
+
+def test_flight_recorder_healthy_run_never_dumps(tmp_path):
+    tel, fr = _flight(tmp_path)
+    for i in range(50):
+        assert fr.observe_step(0.1, step_idx=i) is None
+    assert fr.dumps == []
+    assert not list(tmp_path.iterdir())
+    assert tel.summary()["slo_dumps"] == 0
+
+
+def test_flight_recorder_breach_dumps_once_and_latches(tmp_path):
+    tel, fr = _flight(tmp_path)
+    dumped = [fr.observe_step(5.0, step_idx=i) for i in range(20)]
+    fired = [d for d in dumped if d]
+    assert len(fired) == 1  # latched: a sustained breach is ONE dump
+    assert dumped[fr.min_steps - 1] == fired[0]  # at the warmup boundary
+    assert fr.dumps == fired
+    trace = json.loads((tmp_path / "slo_dump_000_trace.json").read_text())
+    assert any(e["name"] == "slo_breach"
+               for e in trace["traceEvents"])
+    [snap] = Registry.read_jsonl(str(tmp_path /
+                                     "slo_dump_000_metrics.jsonl"))
+    assert snap["meta"]["reason"] == "slo_p95_breach"
+    assert snap["meta"]["slo_s"] == 1.0
+    s = tel.summary()
+    assert s["slo_dumps"] == 1
+    assert s["slo_last_dump"].endswith("slo_dump_000")
+    assert tel.metrics.value("repro_slo_dumps_total") == 1
+
+
+def test_flight_recorder_min_steps_guard(tmp_path):
+    _, fr = _flight(tmp_path, min_steps=6)
+    for i in range(5):  # all breaching, but under the warmup floor
+        assert fr.observe_step(9.0, step_idx=i) is None
+    assert fr.observe_step(9.0, step_idx=5) is not None
+
+
+def test_flight_recorder_rearms_after_recovery(tmp_path):
+    _, fr = _flight(tmp_path, window=4, min_steps=4, rearm_ratio=0.5)
+    assert [bool(fr.observe_step(9.0)) for _ in range(4)][-1]
+    # recovery: window refills with fast steps; p95 drops under
+    # rearm_ratio * slo -> re-armed, the NEXT breach dumps again (and
+    # immediately re-latches)
+    for _ in range(4):
+        assert fr.observe_step(0.1) is None
+    assert [bool(fr.observe_step(9.0)) for _ in range(4)] == \
+        [True, False, False, False]
+    assert len(fr.dumps) == 2
+    assert fr.dumps[1].endswith("slo_dump_001")
+
+
+def test_flight_recorder_rolling_p95_math(tmp_path):
+    _, fr = _flight(tmp_path, window=100, min_steps=1, slo_p95_s=99.0)
+    for i in range(1, 101):
+        fr.observe_step(float(i))
+    assert fr.rolling_p95() == 95.0  # index ceil(.95*100)-1 of 1..100

@@ -144,3 +144,127 @@ def test_padded_engine_telemetry(smollm):
     kinds = {s["labels"]["kind"] for s
              in snap["repro_compile_events_total"]["series"]}
     assert "decode" in kinds and any("prefill" in k for k in kinds)
+
+
+# ---------------------------------------------------------------------------
+# device-side timing: XLA cost_analysis in the grid, host-overhead refit
+# ---------------------------------------------------------------------------
+
+
+def test_latency_grid_carries_device_cost(chunked_run):
+    """Every grid entry carries the executable's XLA cost_analysis
+    (flops + bytes), the refit's device-time floor."""
+    grid = chunked_run.engine.telemetry.latency_grid()
+    assert grid["entries"]
+    for e in grid["entries"]:
+        assert e["flops"] and e["flops"] > 0, e
+        assert e["bytes_accessed"] and e["bytes_accessed"] > 0, e
+
+
+def test_refit_separate_host_overhead(chunked_run, tmp_path):
+    """`separate_host_overhead=True` reports a host-overhead estimate
+    and folds it into calibration; the default reports the diagnostic
+    but calibrates on raw wall-clock."""
+    grid = chunked_run.engine.telemetry.latency_grid()
+    out = tmp_path / "refit_host.json"
+    rep = refit_from_telemetry(grid, str(out),
+                               separate_host_overhead=True)
+    st = rep["phases"]["unified"]
+    assert st["host_overhead_s_est"] is not None
+    assert st["host_overhead_s_est"] >= 0
+    assert 0.0 < st["device_time_fraction"] <= 1.0
+    assert st["host_overhead_applied_s"] == st["host_overhead_s_est"]
+    assert st["calibration_ratio"] > 0
+    try:
+        heuristics.load(str(out))  # still a drop-in tree
+    finally:
+        heuristics.reset()
+    rep_raw = refit_from_telemetry(grid, str(tmp_path / "refit_raw.json"))
+    st_raw = rep_raw["phases"]["unified"]
+    assert st_raw["host_overhead_applied_s"] == 0.0
+    assert st_raw["host_overhead_s_est"] == st["host_overhead_s_est"]
+
+
+# ---------------------------------------------------------------------------
+# online refit daemon: hot-swap between steps, token identity
+# ---------------------------------------------------------------------------
+
+
+def test_refit_daemon_hot_swaps_token_identically(smollm, tmp_path):
+    """The full online loop on the engine hook: watch -> refit -> hot-
+    swap, with the emitted tokens EXACTLY those of an unobserved run —
+    the swap may only re-route dispatch."""
+    from repro.obs import RefitDaemon
+
+    cfg, params = smollm
+    rng = np.random.default_rng(9)
+    prompts = H.make_prompts(cfg, rng, (18, 7, 24, 11))
+    heuristics.reset()
+    plain = H.run_requests(H.build_engine(cfg, params), prompts,
+                           max_new_tokens=10)
+    tel = Telemetry(launch_timing_interval=1)
+    daemon = RefitDaemon(tel, out_dir=str(tmp_path), min_new=3)
+    try:
+        live = H.run_requests(
+            H.build_engine(cfg, params, telemetry=tel, refit=daemon),
+            prompts, max_new_tokens=10)
+    finally:
+        heuristics.reset()
+    rep = daemon.report()
+    assert rep["refits"] >= 1 and rep["swaps"] >= 1
+    assert all(s is not None for s in rep["swap_steps"])
+    # swaps happen at step boundaries within the run
+    assert max(rep["swap_steps"]) <= live.num_steps
+    assert (tmp_path / "refit-000.json").exists()
+    import json as _json
+    raw = _json.loads((tmp_path / "refit-000.json").read_text())
+    # the packed engine's grid is all unified-phase launches
+    assert raw["unified_tree"], "refit artifact has no unified tree"
+    H.assert_same_outputs(plain, live, label_a="plain",
+                          label_b="online-refit")
+    assert tel.metrics.value("repro_refit_swaps_total") == rep["swaps"]
+    # the hot-swap left its mark on the trace for post-hoc audit
+    assert any(e["name"] == "heuristics_hot_swap"
+               for e in tel.tracer.events())
+
+
+def test_forced_hot_swap_reroutes_dispatch_not_tokens(smollm, tmp_path):
+    """Differential guard from the ISSUE: a mid-run tree swap that
+    FORCES a different kernel variant changes `Engine.dispatch_counts`
+    routing — and nothing else.  Uses the same `load_payload` plumbing
+    the daemon's `apply_pending` calls between steps."""
+    from repro.serving.request import make_requests
+
+    cfg, params = smollm
+    rng = np.random.default_rng(13)
+    prompts = H.make_prompts(cfg, rng, (16, 8, 22))
+    heuristics.reset()
+    plain = H.run_requests(H.build_engine(cfg, params), prompts,
+                           max_new_tokens=8)
+    # a tree that routes EVERY unified launch to the segmented variant
+    # (the defaults pick gqa for this geometry)
+    seg = {"variant": "segmented", "tile": None, "num_segments": 2,
+           "block_q": 16}
+    payload = {"decode_tree": [[{}, seg]], "prefill_tree": [[{}, seg]],
+               "unified_tree": [[{}, seg]]}
+    eng = H.build_engine(cfg, params)
+    reqs = make_requests([list(p) for p in prompts], max_new_tokens=8)
+    for r in reqs:
+        eng.add_request(r)
+    swap_at, steps = 4, 0
+    try:
+        while eng.sched.has_work:
+            if steps == swap_at:  # step boundary: the daemon's swap point
+                heuristics.load_payload(payload, source="<forced>")
+            eng.step()
+            steps += 1
+    finally:
+        heuristics.reset()
+    variants = {v for (ph, v) in eng.dispatch_counts if ph == "unified"}
+    assert variants == {"gqa", "segmented"}, (
+        f"swap at step {swap_at} should split routing, got {variants}: "
+        f"{dict(eng.dispatch_counts)}")
+    for i, (ra, rb) in enumerate(zip(plain.requests, reqs)):
+        assert ra.output == rb.output, (
+            f"request {i}: forced variant swap changed tokens\n"
+            f"  plain:   {ra.output}\n  swapped: {rb.output}")
