@@ -12,8 +12,9 @@ test-full:
 # Serving + scheduler subset: the packed/padded unified-attention and
 # chunked-prefill differential suites, prefix caching + admission
 # ordering, engine/scheduler behavior, fused sampling + the async
-# stream loop, the allocator property tests, the autotune
-# sweep/round-trip tests, and the observability suite (metrics
+# stream loop, speculative decoding (n-gram drafts / one-launch verify
+# / exact rollback differentials), the allocator property tests, the
+# autotune sweep/round-trip tests, and the observability suite (metrics
 # registry + scrape server/flight recorder + telemetry-instrumented
 # serving with the online refit daemon) — kernel sweeps and arch
 # matrices (-m slow) don't gate it.
@@ -21,7 +22,7 @@ test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow" \
 	  tests/test_unified_attention.py tests/test_chunked_prefill.py \
 	  tests/test_serving_engine.py tests/test_fused_sampling.py \
-	  tests/test_prefix_cache.py \
+	  tests/test_prefix_cache.py tests/test_spec_decode.py \
 	  tests/test_allocator_properties.py tests/test_paged_kv_cache.py \
 	  tests/test_autotune.py tests/test_obs_metrics.py \
 	  tests/test_obs_server.py tests/test_obs_serving.py
@@ -43,9 +44,10 @@ bench:
 # paying) + fused-sampling (one-dispatch steady step, fused == two-
 # dispatch == stream token identity) + live-obs (mid-run /metrics
 # scrape over a real socket, flight-recorder breach latch, online
-# refit hot-swap token differential) + the telemetry-overhead guard
-# (full observability plane enabled must cost < 5% wall-clock).
-# Writes BENCH_e2e.json.
+# refit hot-swap token differential) + spec-decode (accept rate,
+# accepted tokens/step > 1 on a repetitive trace, one-dispatch verify,
+# token identity) + the telemetry-overhead guard (full observability
+# plane enabled must cost < 5% wall-clock).  Writes BENCH_e2e.json.
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/e2e_latency.py --scenario smoke \
 	  --json-out BENCH_e2e.json

@@ -363,6 +363,79 @@ def run_fused_sampling(emit, cfg=None, params=None):
     return results
 
 
+def run_spec_decode(emit, cfg=None, params=None):
+    """`spec-decode` scenario: a repetitive-text trace (cyclic prompts —
+    the template/code-like traffic n-gram lookup exists for) through the
+    packed engine with and without speculative decoding.  Reports the
+    draft accept rate, accepted/emitted tokens per step, step counts and
+    device dispatches per step; the guards are the PR's acceptance
+    criteria — token-for-token identity with the non-speculative path,
+    accepted tokens/step > 1.0, and a steady step still exactly ONE
+    device dispatch (verify + accept + bonus sampling are fused into the
+    unified launch)."""
+    if cfg is None:
+        cfg = reduced(ARCHS["smollm-135m"]).replace(dtype="float32")
+        params = M.init(cfg, jax.random.key(0))
+    cycle = [5, 9, 17, 3]
+    rng = np.random.default_rng(11)
+    prompts = [cycle * 6, (cycle * 5)[:18], cycle * 4,
+               list(rng.integers(1, cfg.vocab_size, size=9))]
+
+    def drive(eng):
+        reqs = make_requests([list(p) for p in prompts], max_new_tokens=24)
+        for r in reqs:
+            eng.add_request(r)
+        t0 = time.perf_counter()
+        steps = 0
+        while eng.sched.has_work:
+            eng.step()
+            steps += 1
+        return {
+            "outputs": [r.output for r in reqs],
+            "steps": steps,
+            "wall": time.perf_counter() - t0,
+            "tokens": sum(len(r.output) for r in reqs),
+            "device_calls": sum(eng.device_calls.values()),
+        }
+
+    results = {}
+    for tag, spec in (("baseline", False), ("spec", True)):
+        eng = Engine(cfg, params, max_seqs=4, num_pages=256,
+                     max_model_len=256, speculative=spec, draft_k=4)
+        drive(eng)  # warmup: capture executables (incl. spec buckets)
+        eng.device_calls.clear()
+        warm_stats = dict(eng.spec_stats)
+        results[tag] = drive(eng)
+        results[tag]["engine"] = eng
+    spec_eng = results["spec"]["engine"]
+    # measured drive only: the warmup drain's counters would double-count
+    st = {k: spec_eng.spec_stats[k] - warm_stats[k]
+          for k in spec_eng.spec_stats}
+    for tag in ("baseline", "spec"):
+        r = results[tag]
+        emit(f"spec_decode/steps/{tag}", r["steps"],
+             f"drain steps for {r['tokens']} output tokens")
+        emit(f"spec_decode/tokens_per_step/{tag}",
+             r["tokens"] / r["steps"],
+             "output tokens delivered per engine step")
+        emit(f"spec_decode/dispatches_per_step/{tag}",
+             r["device_calls"] / r["steps"],
+             "device dispatches / steps (guard: exactly 1.0)")
+    emit("spec_decode/accept_rate",
+         st["accepted"] / max(st["proposed"], 1),
+         f"drafts verified == target ({st['accepted']}/{st['proposed']} "
+         f"over {st['steps']} speculative steps)")
+    emit("spec_decode/accepted_tokens_per_step",
+         st["accepted"] / results["spec"]["steps"],
+         "accepted draft tokens per engine step (guard: > 1.0 on this "
+         "repetitive trace)")
+    emit("spec_decode/step_reduction",
+         results["baseline"]["steps"] / results["spec"]["steps"],
+         "baseline / speculative drain steps on the same trace")
+    return {"baseline": results["baseline"], "spec": results["spec"],
+            "stats": st}
+
+
 def run_tp_scaling(emit):
     """`tp-scaling` scenario: the mesh executor's scaling contract.  A
     child process (this file, `--scenario _tp-child`) is re-exec'd with
@@ -650,13 +723,14 @@ if __name__ == "__main__":
     # (CSV to stdout + machine-readable BENCH_e2e.json) in well under two
     # minutes.  `smoke` = padding-waste + fused-sampling + live-obs
     # (mid-run scrape / flight-recorder latch / refit hot-swap token
-    # differential) + the telemetry-overhead guard.
+    # differential) + spec-decode (accept rate / one-dispatch / token
+    # identity guards) + the telemetry-overhead guard.
     import argparse
     import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="smoke",
                     choices=["smoke", "padding-waste", "fused-sampling",
-                             "telemetry-overhead", "live-obs",
+                             "telemetry-overhead", "live-obs", "spec-decode",
                              "tp-scaling", "_tp-child", "all"])
     ap.add_argument("--json-out", default="BENCH_e2e.json", metavar="PATH",
                     help="machine-readable results ('' disables)")
@@ -727,6 +801,21 @@ if __name__ == "__main__":
         assert lo["families"] >= 10, (
             f"mid-run /metrics scrape parsed only {lo['families']} "
             f"families")
+    if args.scenario in ("smoke", "spec-decode", "all"):
+        sd = run_spec_decode(_emit)
+        assert sd["spec"]["outputs"] == sd["baseline"]["outputs"], \
+            "speculative decoding changed emitted tokens"
+        for tag in ("baseline", "spec"):
+            r = sd[tag]
+            assert r["device_calls"] == r["steps"], (
+                f"{tag} broke the one-dispatch steady step: "
+                f"{r['device_calls']} dispatches over {r['steps']} steps")
+        st = sd["stats"]
+        assert st["accepted"] / sd["spec"]["steps"] > 1.0, (
+            f"accepted tokens/step {st['accepted']}/{sd['spec']['steps']} "
+            f"did not beat 1.0 on the repetitive trace")
+        assert sd["spec"]["steps"] < sd["baseline"]["steps"], \
+            "speculation saved no steps on the repetitive trace"
     if args.scenario in ("smoke", "telemetry-overhead", "all"):
         tel_res = run_telemetry_overhead(_emit)
         assert tel_res["overhead"] < 0.05, (

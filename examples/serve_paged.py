@@ -52,6 +52,15 @@ def main():
                     help="sample host-side from transferred logits "
                          "(two dispatches/step) instead of in-graph "
                          "(one fused dispatch/step; docs/serving.md)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative decoding: per-request n-gram drafts "
+                         "verified in the one packed launch, exact page "
+                         "rollback on rejection (docs/serving.md); "
+                         "outputs are token-identical to the plain path")
+    ap.add_argument("--draft-k", type=int, default=4, metavar="K",
+                    help="max draft tokens proposed per request per step "
+                         "(adaptive: shrinks/regrows with the accept-rate "
+                         "EMA; default 4)")
     ap.add_argument("--stream", action="store_true",
                     help="drive via submit() + run(): async double-"
                          "buffered loop, tokens printed as they land")
@@ -157,6 +166,8 @@ def main():
                  enable_chunked_prefill=args.chunked_prefill,
                  max_prefill_tokens=budget,
                  fused_sampling=not args.no_fused_sampling,
+                 speculative=args.speculative,
+                 draft_k=args.draft_k,
                  telemetry=tel,
                  refit=daemon,
                  tp=args.tp)
@@ -249,6 +260,14 @@ def _drive_and_report(args, eng, reqs, tel, daemon, budget, t0):
     if args.chunked_prefill:
         print(f"chunked prefill: budget={budget} tokens/step, "
               f"{partial_chunks} partial chunks scheduled")
+    if args.speculative:
+        st = eng.spec_stats
+        rate = st["accepted"] / st["proposed"] if st["proposed"] else 0.0
+        k = eng.drafter.controller.k if eng.drafter is not None else 0
+        print(f"speculative decoding: {st['proposed']} drafted, "
+              f"{st['accepted']} accepted ({rate:.1%}), "
+              f"{st['emitted']} emitted over {st['steps']} spec steps "
+              f"(adaptive k now {k})")
     if eng.prefix_cache is not None:
         st = eng.prefix_cache.stats()
         print(f"prefix cache: {st['cache_hits']} hits / "

@@ -46,6 +46,12 @@ class Scenario:
     head_dim: int
     page_size: int
     dtype_bytes: int = 2
+    # speculative-decoding dimension mirrored from BatchProfile: pow2
+    # count of draft tokens verified in the launch (0: non-speculative).
+    # The token work already rides in query_lens (spec rows pack as
+    # q=k+1 resumed chunks); this keeps the feature visible to fit_tree
+    # so a refit can split spec from plain traffic.
+    spec_tokens: int = 0
 
     @property
     def group(self) -> int:

@@ -25,7 +25,7 @@ from repro.core.attention.heuristics import KernelConfig
 from repro.roofline import hw
 
 FEATURES = ("num_seqs", "max_context", "group", "decode_share",
-            "avg_query_len", "total_tokens")
+            "avg_query_len", "total_tokens", "spec_tokens")
 
 
 def _feat(sr: SweepResult, name: str):
@@ -172,6 +172,7 @@ def scenario_from_profile(profile: dict, arch: dict,
         head_dim=int(arch.get("head_dim", ARCH_DEFAULTS["head_dim"])),
         page_size=int(profile["page_size"])
         or int(arch.get("page_size", ARCH_DEFAULTS["page_size"])),
+        spec_tokens=int(profile.get("spec_tokens", 0) or 0),
     )
 
 

@@ -45,6 +45,11 @@ class BatchProfile:
     decode_share: float = 1.0  # fraction of decode requests in the batch
     avg_query_len: int = 1
     total_tokens: int = 0  # packed token-stream length (0: per-phase launch)
+    # speculative-decoding dimension: pow2-bucketed count of draft tokens
+    # verified in the launch (0: non-speculative).  Spec steps stretch
+    # decode rows into short resumed chunks, a distinct shape the tuned
+    # trees can split on.
+    spec_tokens: int = 0
     # mesh fingerprint: tuned trees are keyed per (arch, tp) — a tp-split
     # head axis changes per-device arithmetic intensity, so a tree fit at
     # tp=1 must not silently steer a tp=4 deployment (PAPERS.md:

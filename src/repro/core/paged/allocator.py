@@ -137,6 +137,12 @@ class RefCountedPageAllocator(PageAllocator):
 
     Without a prefix cache attached (nothing ever `mark_cached`), behavior
     is identical to `PageAllocator` with refcounts pinned at 1.
+
+    Eviction order is hit-count-weighted (radix-cache style): each prefix
+    cache hit (`reuse`) bumps the page's hit counter, and `_evict_one`
+    reclaims the evictable page with the FEWEST hits, breaking ties by
+    LRU order.  A pool where nothing was ever re-hit degenerates to pure
+    LRU, so cache-off workloads see the old behavior exactly.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -144,6 +150,7 @@ class RefCountedPageAllocator(PageAllocator):
         self._ref: dict[int, int] = {}
         self._evictable: OrderedDict[int, None] = OrderedDict()  # LRU->MRU
         self._cached: set[int] = set()
+        self._hits: dict[int, int] = {}  # page -> prefix-cache hit count
         self.on_evict: Callable[[int], None] | None = None
         self.evictions = 0
 
@@ -178,8 +185,12 @@ class RefCountedPageAllocator(PageAllocator):
         return out
 
     def _evict_one(self) -> int:
-        page, _ = self._evictable.popitem(last=False)  # LRU first
+        # fewest hits first; ties fall back to LRU (iteration order of the
+        # OrderedDict is LRU->MRU, and min() keeps the first minimum)
+        page = min(self._evictable, key=lambda p: self._hits.get(p, 0))
+        del self._evictable[page]
         self._cached.discard(page)
+        self._hits.pop(page, None)
         self.evictions += 1
         if self.on_evict is not None:
             self.on_evict(page)
@@ -194,6 +205,7 @@ class RefCountedPageAllocator(PageAllocator):
         """Pin cached pages for a new sequence: bump live refs, resurrect
         evictable pages (removing them from the LRU pool)."""
         for p in pages:
+            self._hits[p] = self._hits.get(p, 0) + 1
             if p in self._ref:
                 self._ref[p] += 1
             else:
@@ -216,6 +228,7 @@ class RefCountedPageAllocator(PageAllocator):
                 if p in self._cached:
                     self._evictable[p] = None  # append at MRU end
                 else:
+                    self._hits.pop(p, None)  # content dead
                     self._free.append(p)
 
     # -- prefix-cache hooks ------------------------------------------------
@@ -230,6 +243,7 @@ class RefCountedPageAllocator(PageAllocator):
         """Drop the cache marking (cache-side invalidation). An evictable
         page moves straight to the free list."""
         self._cached.discard(page)
+        self._hits.pop(page, None)
         if page in self._evictable:
             del self._evictable[page]
             self._free.append(page)

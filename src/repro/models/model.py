@@ -549,7 +549,8 @@ def apply_prefill_cached(cfg: ModelConfig, params, cache, batch, *,
 def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
                   kernel_cfg=None, num_decode_seqs: int = 0,
                   sample: bool = False, seed: int = 0,
-                  return_logits: bool = False, shard=None):
+                  return_logits: bool = False, shard=None,
+                  max_draft: int = 0):
     """Token-packed unified step: ONE executable for decode rows, fresh
     prefill chunks, and resumed/cached chunks — and, with `sample=True`,
     for the last-token gather + sampling too, so the only thing that
@@ -574,12 +575,26 @@ def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
     step before the previous step's tokens reach the host, leaving the
     just-sampled ids on device.
 
+    Speculative verification (`max_draft = K > 0`, requires `sample`):
+    the batch carries `spec_lens` [S] i32 — rows with spec_lens == s > 0
+    are decode requests packed as resumed chunks whose s+1 inputs are
+    [last real token, draft_1..draft_s].  The target token for each verify
+    position j (0 <= j <= s) is sampled from the logits at segment offset
+    qlen-1-s+j with the PRNG counter num_generated + j — the EXACT key
+    sequential decoding would fold for that draw — so accepted tokens are
+    bit-identical to non-speculative decoding for every sampling config,
+    not just greedy.  A row emits 1 + (longest prefix of drafts matching
+    the sampled targets) tokens; the last emitted token is the bonus /
+    correction sample.  Plain rows (spec_lens == 0, including completing
+    prefill chunks) reduce to the ordinary fused sample in column 0.
+
     Returns (last_logits [S, V], new_cache) without sampling;
-    (sampled_tokens [S], new_cache) with it; and
-    (sampled_tokens, last_logits, new_cache) with `return_logits=True`
-    (the debug-logits flag — it reintroduces the [S, V] transfer, so it
-    is off in production).  Attention-family models only (SSM/hybrid
-    state is slot-indexed, not page-addressable).
+    (sampled_tokens [S], new_cache) with it; with `max_draft > 0`,
+    (sampled_tokens [S, K+1], num_emitted [S], new_cache); and
+    `return_logits=True` (the debug-logits flag — it reintroduces the
+    [S, V] transfer, so it is off in production) inserts last_logits
+    before new_cache in either shape.  Attention-family models only
+    (SSM/hybrid state is slot-indexed, not page-addressable).
 
     `shard` (sharding.ShardCtx) marks a per-device invocation inside the
     mesh executor's shard_map: attention computes only the local head
@@ -612,13 +627,51 @@ def apply_unified(cfg: ModelConfig, params, cache, batch, *, backend="xla",
     last_logits = logits[0, last]
     if not sample:
         return last_logits, new_cache
-    keys = sampling.request_keys(seed, batch["stream_ids"],
-                                 batch["num_generated"])
-    toks = sampling.sample_tokens(last_logits, batch["temperature"],
-                                  batch["top_p"], batch["top_k"], keys)
+    if max_draft == 0:
+        keys = sampling.request_keys(seed, batch["stream_ids"],
+                                     batch["num_generated"])
+        toks = sampling.sample_tokens(last_logits, batch["temperature"],
+                                      batch["top_p"], batch["top_k"], keys)
+        if return_logits:
+            return toks, last_logits, new_cache
+        return toks, new_cache
+    # --- speculative verify: sample K+1 target tokens per row ----------
+    # Verify position j of a row with s drafts reads the logits at
+    # segment offset qlen-1-s+j: the logits that *predict* the token at
+    # absolute position context_len-s+j.  Rows with s < K clamp their
+    # leading columns to the segment start — those columns are never
+    # consumed (num_emitted caps at s+1, plain rows use column 0 only).
+    K = max_draft
+    spec = batch["spec_lens"]                               # [S] i32
+    S = spec.shape[0]
+    offs = jnp.arange(K + 1, dtype=last.dtype)              # [K+1]
+    start = batch["query_start_loc"][:-1]
+    pos = last[:, None] - spec[:, None] + offs[None, :]     # [S, K+1]
+    pos = jnp.clip(pos, start[:, None], last[:, None])
+    pos = jnp.clip(pos, 0, logits.shape[1] - 1)
+    ver_logits = logits[0, pos]                             # [S, K+1, V]
+    # per-position keys at counters num_generated + j: the exact fold
+    # sequence sequential decoding would use for these draws
+    rep = lambda a: jnp.repeat(a, K + 1)
+    streams = rep(batch["stream_ids"])
+    ngen = (batch["num_generated"][:, None]
+            + offs[None, :].astype(batch["num_generated"].dtype))
+    keys = sampling.request_keys(seed, streams, ngen.reshape(-1))
+    toks = sampling.sample_tokens(
+        ver_logits.reshape(S * (K + 1), -1),
+        rep(batch["temperature"]), rep(batch["top_p"]),
+        rep(batch["top_k"]), keys).reshape(S, K + 1)
+    # drafts are the packed *inputs* one slot ahead of each verify
+    # position; accept the longest prefix where target == draft
+    dpos = jnp.clip(pos[:, :-1] + 1, 0, inputs.shape[1] - 1)
+    drafts = inputs[0, dpos]                                # [S, K]
+    match = (toks[:, :-1] == drafts) & (offs[None, :-1] < spec[:, None])
+    num_emitted = 1 + jnp.sum(
+        jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    num_emitted = num_emitted.astype(jnp.int32)
     if return_logits:
-        return toks, last_logits, new_cache
-    return toks, new_cache
+        return toks, num_emitted, last_logits, new_cache
+    return toks, num_emitted, new_cache
 
 
 def apply_decode(cfg: ModelConfig, params, cache, batch, *, backend="xla",

@@ -140,6 +140,15 @@ class Telemetry:
         self._cache_tok_c = m.counter(
             "repro_cache_hit_tokens_total",
             "Prompt tokens served from the prefix cache.")
+        self._spec_c = m.counter(
+            "repro_spec_tokens_total",
+            "Speculative decoding token flow: proposed (drafted), "
+            "accepted (verified == target), emitted (accepted + bonus).",
+            labelnames=("kind",))
+        self._spec_accept_g = m.gauge(
+            "repro_spec_accept_rate",
+            "Per-step draft acceptance rate (accepted / proposed; 0 when "
+            "no drafts were scheduled).")
         self._steps_c = m.counter("repro_steps_total", "Engine steps run.")
         self._trace_dropped_g = m.gauge(
             "repro_trace_dropped_events",
@@ -255,6 +264,13 @@ class Telemetry:
         self._tokens_c.inc(stats["prefill_tokens"], kind="prefill")
         self._tokens_c.inc(stats["cached_tokens"], kind="cached_prefill")
         self._tokens_c.inc(sampled, kind="sampled")
+        proposed = stats.get("spec_proposed", 0)
+        if proposed or stats.get("spec_emitted"):
+            self._spec_c.inc(proposed, kind="proposed")
+            self._spec_c.inc(stats.get("spec_accepted", 0), kind="accepted")
+            self._spec_c.inc(stats.get("spec_emitted", 0), kind="emitted")
+            self._spec_accept_g.set(
+                stats.get("spec_accepted", 0) / proposed if proposed else 0.0)
         batch_tokens = n_dec + stats["prefill_tokens"]
         if batch_tokens:
             self._batch_tokens_h.observe(batch_tokens)
@@ -303,7 +319,7 @@ class Telemetry:
                 "profile": dict(zip(
                     ("num_seqs", "max_context", "group", "page_size",
                      "decode_share", "avg_query_len", "total_tokens",
-                     "tp"),
+                     "spec_tokens", "tp"),
                     prof)),
                 "config": dict(zip(
                     ("variant", "tile", "num_segments", "block_q"), cfg)),

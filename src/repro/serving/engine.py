@@ -141,6 +141,10 @@ class _PackedLaunch:
     # per-row (temps, top_p, top_k, streams, num_generated) numpy arrays
     # for the host-side `_sample_fn`; None on the fused path
     sampling: tuple | None = None
+    # speculative decoding: packed row index -> number of DRAFT tokens
+    # verified in that row (the row emits 1..drafts+1 tokens); empty on
+    # non-speculative launches
+    spec: dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -174,6 +178,9 @@ class Engine:
         telemetry=None,
         refit=None,
         tp: int = 1,
+        speculative: bool = False,
+        draft_k: int = 4,
+        spec_config=None,
     ):
         self.cfg = cfg
         self.backend = backend
@@ -231,6 +238,28 @@ class Engine:
         if fused_sampling and not self._packed:
             log.info("engine: fused sampling needs the packed step; "
                      "using the two-dispatch sampler")
+        # speculative decoding (n-gram drafts verified in the one packed
+        # launch — serving/draft.py, docs/serving.md): the verify +
+        # accept/reject + bonus-sample epilogue lives next to fused
+        # sampling inside the unified executable, so it requires the
+        # fused packed path
+        self._spec = bool(speculative) and self._fused
+        if speculative and not self._spec:
+            log.info("engine: speculative decoding needs the fused packed "
+                     "step; running non-speculative")
+        self.drafter = None
+        self.max_draft = 0
+        if self._spec:
+            from repro.serving.draft import Drafter, SpecConfig
+            scfg = spec_config or SpecConfig(max_draft=max(1, draft_k))
+            self.drafter = Drafter(scfg)
+            self.max_draft = scfg.max_draft
+        # cumulative speculative counters (per-step values land in step
+        # stats): proposed drafts, accepted drafts, tokens emitted from
+        # spec rows, and steps that carried at least one spec row
+        self.spec_stats = {"proposed": 0, "accepted": 0, "emitted": 0,
+                           "steps": 0}
+        self._step_spec = (0, 0, 0)  # (proposed, accepted, emitted)/step
         self.seed = seed
         # mesh-aware launch layer: places params/cache and builds the
         # unified executables.  tp=1 degenerates to the pre-executor jit
@@ -239,7 +268,7 @@ class Engine:
         self.executor = make_executor(
             cfg, backend=backend, tp=tp, max_seqs=max_seqs,
             fused=self._fused, seed=seed, debug_logits=debug_logits,
-            packed=self._packed)
+            packed=self._packed, max_draft=self.max_draft)
         self.params = self.executor.place_params(params)
         self._group = max(1, cfg.num_q_heads // max(cfg.num_kv_heads, 1))
         self.dispatch_counts: collections.Counter = collections.Counter()
@@ -279,7 +308,7 @@ class Engine:
                                max_prefill_tokens=max_prefill_tokens,
                                prefix_cache=self.prefix_cache,
                                enable_chunked_prefill=enable_chunked_prefill,
-                               telemetry=telemetry)
+                               telemetry=telemetry, drafter=self.drafter)
         self.cache = self.executor.place_cache(
             M.make_cache(cfg, max_seqs=max_seqs, num_pages=num_pages))
         self.page_table = np.zeros((max_seqs, self.pages_per_seq), np.int32)
@@ -420,16 +449,20 @@ class Engine:
         )
 
     def _unified_profile(self, decode_reqs: list[Request],
-                         prefill_reqs: list[Request]) \
+                         prefill_reqs: list[Request],
+                         spec_total: int = 0) \
             -> heuristics.BatchProfile:
         """Packed-batch profile: the mix features (`total_tokens`,
         `decode_share`, `avg_query_len`) describe the whole step, since
-        the unified tree tunes the single launch covering both phases."""
+        the unified tree tunes the single launch covering both phases.
+        `spec_total` (draft tokens verified this step) is its own bucketed
+        dimension — speculative steps stretch decode rows into short
+        chunks, a shape the tuned trees can split on."""
         nseq = len(decode_reqs) + len(prefill_reqs)
-        total = len(decode_reqs) + sum(r.num_scheduled_tokens
-                                       for r in prefill_reqs)
+        total = len(decode_reqs) + spec_total \
+            + sum(r.num_scheduled_tokens for r in prefill_reqs)
         max_ctx = max(
-            [r.total_len for r in decode_reqs]
+            [r.total_len + len(r.spec_tokens) for r in decode_reqs]
             + [r.chunk_start + r.num_scheduled_tokens
                for r in prefill_reqs])
         return heuristics.BatchProfile(
@@ -439,6 +472,7 @@ class Engine:
             decode_share=len(decode_reqs) / nseq,
             avg_query_len=next_power_of_2(max(total // nseq, 1)),
             total_tokens=next_power_of_2(total),
+            spec_tokens=next_power_of_2(spec_total) if spec_total else 0,
             tp=self.tp,
         )
 
@@ -501,10 +535,14 @@ class Engine:
             ngen[i] = r.num_generated + (1 if r._placeholder else 0)
         return temps, topp, topk, streams, ngen
 
-    def _host_tokens(self, out, pack: _PackedLaunch) -> np.ndarray:
-        """Block on a unified launch's result and return host [S] token
-        ids: the fused path just transfers the sampled ids; the
+    def _host_tokens(self, out, pack: _PackedLaunch):
+        """Block on a unified launch's result and return host token ids:
+        the fused path just transfers the sampled ids ([S], or
+        ([S, K+1] tokens, [S] num_emitted) under speculation); the
         two-dispatch path samples host-side from the [S, V] logits."""
+        if self._spec:
+            toks_d, emitted_d = out
+            return np.asarray(toks_d), np.asarray(emitted_d)
         if self._fused:
             return np.asarray(out)
         self.device_calls["sample"] += 1
@@ -575,9 +613,13 @@ class Engine:
         N+1 before blocking on step N's sampled tokens, so host-side
         batch construction overlaps device execution (`overlap` phase
         spans in telemetry).  Other paths step synchronously — same
-        yields, no overlap."""
+        yields, no overlap.  Speculative engines also step synchronously:
+        step N's acceptance count decides step N+1's packed metadata
+        (positions, context, pages), so there is nothing to pack before
+        the tokens land — speculation buys its overlap inside the launch
+        instead, emitting up to draft_k+1 tokens per dispatch."""
         steps = 0
-        if not self._fused:
+        if not self._fused or self._spec:
             while self.sched.has_work and steps < max_steps:
                 self.step()
                 steps += 1
@@ -692,12 +734,18 @@ class Engine:
         tel = self.telemetry
         self._emitted = []
         stats = flight.stats
+        self._step_spec = (0, 0, 0)
         if flight.pack is not None:
             t_sample = tel.clock.now() if tel else 0.0
             toks = self._host_tokens(flight.out, flight.pack)
             if tel:
                 tel.record_phase("sample", t_sample, tel.clock.now())
             self._consume_unified(flight.pack, toks)
+        if self._spec:
+            p, a, e = self._step_spec
+            stats["spec_proposed"] = p
+            stats["spec_accepted"] = a
+            stats["spec_emitted"] = e
         t_host = tel.clock.now() if tel else 0.0
         for req in list(self.sched.running):
             # a request whose LAST token is still in flight (unfilled
@@ -833,15 +881,41 @@ class Engine:
         `prev_tokens` (= `prev_out`, the previous launch's [S] output)
         and `token_source`, so the host never waits for it.
 
+        Decode-row ORDER within the decode region is free (every row
+        carries its own page-table copy / positions / slot mapping, and
+        `pack.rows` maps requests back to rows per launch), so plain
+        decode rows are sorted by pow2 context-length bucket — rows with
+        similar context depths group coherently for the kernel's page
+        loops.  Speculative decode rows (requests carrying `spec_tokens`
+        drafts) leave the decode region entirely: each packs as a resumed
+        chunk of q = drafts+1 tokens [last real token, draft_1..draft_k]
+        at absolute positions total_len-1.., behind the prefill chunks
+        and likewise context-bucket sorted.  Same executable, no new
+        launch kind — verification is the fused epilogue's job.
+
         Each request's `context_len` advances HERE (the KV its launch
         will write is determined at pack time) — consumers downstream of
         dispatch, like incremental prefix-cache indexing, see the
-        post-step value without blocking on the device."""
+        post-step value without blocking on the device.  Spec rows record
+        the GUARANTEED minimum (total_len: the last real token's KV is
+        written unconditionally); `_consume_unified` finalizes it to
+        cover exactly the accepted tokens and rolls the rest back."""
         tel = self.telemetry
         t_pack = tel.clock.now() if tel else 0.0
         ms = self.max_seqs
         ps = self.cfg.page_size
-        n_pref = sum(r.num_scheduled_tokens for r in prefill_reqs)
+        bucket = lambda r: next_power_of_2(max(r.total_len, 1))
+        plain = [r for r in decode_reqs if not r.spec_tokens]
+        spec_reqs = [r for r in decode_reqs if r.spec_tokens]
+        plain.sort(key=bucket)
+        spec_reqs.sort(key=bucket)
+        assert len(prefill_reqs) + len(spec_reqs) <= ms, \
+            "chunk region overflow: scheduler must cap spec rows"
+        spec_total = sum(len(r.spec_tokens) for r in spec_reqs)
+        profile = self._unified_profile(decode_reqs, prefill_reqs,
+                                        spec_total=spec_total)
+        n_pref = sum(r.num_scheduled_tokens for r in prefill_reqs) \
+            + spec_total + len(spec_reqs)
         t = ms + (max(next_power_of_2(n_pref), ps) if n_pref else 0)
         s = 2 * ms
         # static FULL-width page table (paper C5, like the padded decode
@@ -862,8 +936,8 @@ class Engine:
         qlens[:ms] = 1  # every decode row is a 1-token segment (dead rows
         #                 are masked by ctx == 0, not by qlen)
         rows: list[tuple[Request, int, int]] = []
-        for r in decode_reqs:
-            i = r.slot
+        spec_map: dict[int, int] = {}
+        for i, r in enumerate(plain):
             if prev_rows and r.req_id in prev_rows:
                 # input token still in flight: read it device-side from
                 # the previous launch's output (host copy is the PENDING
@@ -875,34 +949,53 @@ class Engine:
             p = r.total_len - 1
             pos[0, i] = p
             ctx[i] = r.total_len
-            row = self.page_table[i]
+            row = self.page_table[r.slot]
             pt[i] = row[:np_b]
             slots[0, i] = self._page_slots(row, np.asarray(p))
             rows.append((r, i, r._spec_epoch))
             r.context_len = r.total_len
         cur = ms
-        for j, r in enumerate(prefill_reqs):
+        for j, r in enumerate(prefill_reqs + spec_reqs):
             i = ms + j
-            n = r.num_scheduled_tokens
-            chunk = r.prompt[r.chunk_start: r.chunk_start + n]
-            tokens[0, cur: cur + n] = chunk
-            p = np.arange(r.chunk_start, r.chunk_start + n, dtype=np.int32)
+            if r.spec_tokens:
+                # speculative verify row: q = drafts+1 resumed chunk
+                # feeding [t_{n-1}, d_1..d_k] at positions n-1..n+k-1
+                # (n = total_len).  ctx = n+k so each draft attends its
+                # predecessors; the fused verify epilogue accepts the
+                # longest prefix of drafts matching the sampled targets.
+                drafts = r.spec_tokens
+                r.spec_tokens = []  # consumed by this launch
+                n = len(drafts) + 1
+                last = r.output[-1] if r.output else r.prompt[-1]
+                tokens[0, cur: cur + n] = [last] + drafts
+                p = np.arange(r.total_len - 1, r.total_len - 1 + n,
+                              dtype=np.int32)
+                ctx[i] = r.total_len - 1 + n
+                spec_map[i] = n - 1
+                rows.append((r, i, r._spec_epoch))
+                r.context_len = r.total_len  # minimum; consume finalizes
+            else:
+                n = r.num_scheduled_tokens
+                chunk = r.prompt[r.chunk_start: r.chunk_start + n]
+                tokens[0, cur: cur + n] = chunk
+                p = np.arange(r.chunk_start, r.chunk_start + n,
+                              dtype=np.int32)
+                ctx[i] = r.chunk_start + n
+                if r.chunk_start + n == r.num_prompt_tokens:
+                    rows.append((r, i, r._spec_epoch))  # completing: samples
+                r.context_len = r.chunk_start + n
             pos[0, cur: cur + n] = p  # packed-position RoPE: absolute
             qlens[i] = n
-            ctx[i] = r.chunk_start + n
             row = self.page_table[r.slot]
             pt[i] = row[:np_b]
             slots[0, cur: cur + n] = self._page_slots(row, p)
-            if r.chunk_start + n == r.num_prompt_tokens:
-                rows.append((r, i, r._spec_epoch))  # completing: samples
-            r.context_len = r.chunk_start + n
             cur += n
             qsl[i + 1:] = cur
 
-        profile = self._unified_profile(decode_reqs, prefill_reqs)
         kcfg = self._dispatch("unified", profile)
         pack = _PackedLaunch(rows=rows, prefill_reqs=list(prefill_reqs),
-                             profile=profile, kcfg=kcfg, tokens=t)
+                             profile=profile, kcfg=kcfg, tokens=t,
+                             spec=spec_map)
         batch = {
             "inputs": jnp.asarray(tokens),
             "positions": self._positions(pos),
@@ -923,6 +1016,11 @@ class Engine:
             batch["token_source"] = jnp.asarray(src)
             batch["prev_tokens"] = (prev_out if prev_out is not None
                                     else jnp.zeros((s,), jnp.int32))
+            if self._spec:
+                spec_lens = np.zeros((s,), np.int32)
+                for i, k in spec_map.items():
+                    spec_lens[i] = k
+                batch["spec_lens"] = jnp.asarray(spec_lens)
         else:
             pack.sampling = self._sampling_rows(s, fill)
         if tel:
@@ -943,7 +1041,14 @@ class Engine:
         t_launch = tel.clock.now() if tel else 0.0
         with self._launch_ctx("unified", pack.tokens):
             ret = fn(self.params, cache_in, batch)
-        if self._fused and self._debug_logits:
+        if self._spec:
+            # verify contract: tokens [S, K+1] + num_emitted [S]
+            if self._debug_logits:
+                toks_d, emitted_d, self.last_step_logits, new_cache = ret
+            else:
+                toks_d, emitted_d, new_cache = ret
+            out = (toks_d, emitted_d)
+        elif self._fused and self._debug_logits:
             out, self.last_step_logits, new_cache = ret
         else:
             out, new_cache = ret
@@ -963,18 +1068,68 @@ class Engine:
         self.launched_token_slots += pack.tokens
         return out
 
-    def _consume_unified(self, pack: _PackedLaunch,
-                         toks: np.ndarray) -> None:
+    def _consume_unified(self, pack: _PackedLaunch, toks) -> None:
         """Fold one launch's sampled tokens back into request state.
         Rows whose request finished or was preempted while the launch was
-        in flight (async loop) are discarded by state / epoch."""
+        in flight (async loop) are discarded by state / epoch.
+
+        Speculative launches deliver ([S, K+1] tokens, [S] num_emitted):
+        a spec row emits its accepted drafts plus the bonus/correction
+        token (host-side truncation stops at EOS / max_new_tokens), then
+        ROLLS BACK exactly — context_len is finalized to cover only the
+        kept tokens (KV past it is never read and is rewritten by later
+        steps), and the trailing pages speculation grew are freed through
+        the ref-counted allocator.  Those pages are always this step's
+        fresh refcount-1 allocations (speculation grows past the
+        already-covered total_len), so rollback can never free a shared
+        or cached page."""
         tel = self.telemetry
+        emitted = None
+        if self._spec:
+            toks, emitted = toks
+        step_proposed = step_accepted = step_emitted = 0
+        spec_rows = 0
         for r, row, epoch in pack.rows:
             if r.state is State.FINISHED or r._spec_epoch != epoch:
                 continue
-            self._emit_token(r, int(toks[row]))
-            if tel:
-                tel.requests.token(r)
+            if not self._spec:
+                self._emit_token(r, int(toks[row]))
+                if tel:
+                    tel.requests.token(r)
+                continue
+            k = pack.spec.get(row, 0)
+            e = min(int(emitted[row]), k + 1)
+            kept = 0
+            for j in range(e):
+                self._emit_token(r, int(toks[row, j]))
+                kept += 1
+                if tel:
+                    tel.requests.token(r)
+                if r.done:
+                    break
+            if k:
+                # exact rollback: KV is valid through the accepted tokens
+                # only (the bonus token's KV is written next step, exactly
+                # like a plain decode), and the draft pages beyond the new
+                # total_len go back to the pool
+                r.context_len = r.total_len - 1
+                target = self.alloc.pages_needed(r.total_len)
+                if len(r.pages) > target:
+                    self.alloc.free(r.pages[target:])
+                    del r.pages[target:]
+                spec_rows += 1
+                step_proposed += k
+                step_accepted += kept - 1
+                step_emitted += kept
+                if self.drafter is not None:
+                    self.drafter.observe(k, kept - 1)
+        if self._spec:
+            self._step_spec = (step_proposed, step_accepted, step_emitted)
+            self.spec_stats["proposed"] += step_proposed
+            self.spec_stats["accepted"] += step_accepted
+            self.spec_stats["emitted"] += step_emitted
+            if spec_rows:
+                self.spec_stats["steps"] += 1
         if tel:
             for r in pack.prefill_reqs:
                 if r.state in (State.PREFILLING, State.RUNNING):

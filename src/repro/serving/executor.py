@@ -59,13 +59,17 @@ class DeviceMeshExecutor:
     tp: int = 1
     pp: int = 1
 
-    def __init__(self, cfg, *, backend, max_seqs, fused, seed, debug_logits):
+    def __init__(self, cfg, *, backend, max_seqs, fused, seed, debug_logits,
+                 max_draft=0):
         self.cfg = cfg
         self.backend = backend
         self.max_seqs = max_seqs
         self.fused = fused
         self.seed = seed
         self.debug_logits = debug_logits
+        # speculative decoding: K > 0 switches the fused epilogue to the
+        # [S, K+1] verify contract (tokens + num_emitted outputs)
+        self.max_draft = max_draft
 
     def place_params(self, params):
         return params
@@ -88,7 +92,7 @@ class SingleDeviceExecutor(DeviceMeshExecutor):
             M.apply_unified, self.cfg, backend=self.backend,
             kernel_cfg=kernel_cfg, num_decode_seqs=self.max_seqs,
             sample=self.fused, seed=self.seed,
-            return_logits=self.debug_logits,
+            return_logits=self.debug_logits, max_draft=self.max_draft,
         ))
 
 
@@ -131,8 +135,15 @@ class TensorParallelExecutor(DeviceMeshExecutor):
             kernel_cfg=kernel_cfg, num_decode_seqs=self.max_seqs,
             sample=self.fused, seed=self.seed,
             return_logits=self.debug_logits, shard=self.shard,
+            max_draft=self.max_draft,
         )
-        n_out = 2 if (self.fused and self.debug_logits) else 1
+        # replicated outputs before the cache: logits OR fused tokens,
+        # plus num_emitted under speculation, plus debug logits
+        n_out = 1
+        if self.fused and self.max_draft:
+            n_out += 1
+        if self.fused and self.debug_logits:
+            n_out += 1
 
         def run(params, cache, batch):
             # spec trees come from the actual pytrees at trace time, so
@@ -168,9 +179,9 @@ class PipelineParallelExecutor(DeviceMeshExecutor):
 
 
 def make_executor(cfg, *, backend, tp=1, pp=1, max_seqs, fused, seed,
-                  debug_logits, packed=True):
+                  debug_logits, packed=True, max_draft=0):
     kw = dict(backend=backend, max_seqs=max_seqs, fused=fused, seed=seed,
-              debug_logits=debug_logits)
+              debug_logits=debug_logits, max_draft=max_draft)
     if pp > 1:
         return PipelineParallelExecutor(cfg, pp=pp, **kw)
     if tp > 1:

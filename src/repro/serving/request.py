@@ -64,12 +64,19 @@ class Request:
     # (preemption bumps the epoch so stale in-flight tokens are discarded)
     _placeholder: bool = False
     _spec_epoch: int = 0
+    # speculative-decoding draft tokens proposed for *this* step by the
+    # n-gram drafter (scheduler-owned, consumed by the packer): the engine
+    # packs the row as a q = len(spec_tokens)+1 resumed chunk and verifies
+    # the drafts in-graph.  Drafts are proposals only — they never enter
+    # `output` until the verify launch accepts them.
+    spec_tokens: list[int] = dataclasses.field(default_factory=list)
 
     def discard_speculative(self) -> None:
         """Invalidate in-flight sampled tokens (called on preemption):
         drop the un-filled placeholder, if any, and bump the epoch so the
         engine discards this request's rows from in-flight launches."""
         self._spec_epoch += 1
+        self.spec_tokens = []
         if self._placeholder:
             self.output.pop()
             self._placeholder = False

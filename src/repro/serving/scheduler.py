@@ -59,6 +59,7 @@ class ScheduleDecision:
     preempted: list[Request]
     token_budget: int = 0  # the step's total budget (max_prefill_tokens)
     decodes_charged: bool = False  # chunked mode charges decodes 1 token
+    spec_tokens: int = 0  # draft tokens proposed this step (speculative)
 
     @property
     def scheduled_prefill_tokens(self) -> int:
@@ -84,7 +85,7 @@ class Scheduler:
                  max_prefill_tokens: int = 8192,
                  prefix_cache: PrefixCache | None = None,
                  enable_chunked_prefill: bool = False,
-                 telemetry=None):
+                 telemetry=None, drafter=None):
         assert max_prefill_tokens > 0, "token budget must be positive"
         self.alloc = allocator
         self.max_seqs = max_seqs
@@ -92,6 +93,7 @@ class Scheduler:
         self.prefix_cache = prefix_cache
         self.enable_chunked_prefill = enable_chunked_prefill
         self.telemetry = telemetry  # obs.Telemetry | None
+        self.drafter = drafter  # serving.draft.Drafter | None (spec decode)
         self.waiting: list[Request] = []
         self.running: list[Request] = []
         # streaming finish callback: invoked with each request the moment
@@ -141,6 +143,8 @@ class Scheduler:
         req.state = State.FINISHED
         self._free_request(req)
         self.running.remove(req)
+        if self.drafter is not None:
+            self.drafter.forget(req.req_id)
         if self.telemetry is not None:
             self.telemetry.scheduler_event("finished")
             self.telemetry.requests.finish(req)
@@ -359,6 +363,43 @@ class Scheduler:
             if self.telemetry is not None:
                 self.telemetry.scheduler_event("admitted")
 
+        # --- 4. speculative drafts (spec-decode engines only) -------------
+        # Runs AFTER admissions so the chunk-region row count is final: a
+        # drafted decode row packs as a resumed chunk (q = k+1) and shares
+        # the [max_seqs, 2*max_seqs) row range with prefill chunks.
+        # Speculation is strictly best-effort: it never preempts and never
+        # evicts cached pages — a draft shrinks to what the FREE pool
+        # covers right now, down to nothing.  In chunked mode draft tokens
+        # are charged to the budget after the fact (they ride the step,
+        # they must not displace prefill admissions).
+        spec_scheduled = 0
+        if self.drafter is not None and decode_reqs:
+            t0 = self.telemetry.clock.now() if self.telemetry else 0.0
+            spec_slots = self.max_seqs - len(prefill_reqs)
+            for req in decode_reqs:
+                if spec_slots <= 0:
+                    break
+                drafts = self.drafter.propose(req)
+                while drafts and self.alloc.pages_to_cover(
+                        len(req.pages),
+                        req.total_len + len(drafts)) > self.alloc.free_pages:
+                    drafts.pop()
+                if not drafts:
+                    continue
+                need = self.alloc.pages_to_cover(
+                    len(req.pages), req.total_len + len(drafts))
+                if need > 0:
+                    req.pages.extend(self.alloc.allocate(need))
+                req.spec_tokens = drafts
+                spec_scheduled += len(drafts)
+                spec_slots -= 1
+                if self.enable_chunked_prefill:
+                    budget -= len(drafts)
+            if self.telemetry is not None:
+                self.telemetry.record_phase(
+                    "draft", t0, self.telemetry.clock.now(),
+                    tokens=spec_scheduled)
+
         # --- liveness backstop --------------------------------------------
         # Every resident request is a stalled chunked prefill (they jointly
         # exhausted the pool, so none can grow and nothing decodes): evict
@@ -374,4 +415,5 @@ class Scheduler:
 
         return ScheduleDecision(decode_reqs, prefill_reqs, preempted,
                                 token_budget=self.max_prefill_tokens,
-                                decodes_charged=self.enable_chunked_prefill)
+                                decodes_charged=self.enable_chunked_prefill,
+                                spec_tokens=spec_scheduled)

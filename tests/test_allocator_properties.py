@@ -113,6 +113,85 @@ def test_release_past_zero_is_always_a_hard_error(data):
     alloc.check_invariants([])
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_speculate_reject_free_conserves_pages(data):
+    """Speculative decoding's page lifecycle: grow a sequence's page run
+    to cover k draft tokens, verify-reject some suffix of them, roll back
+    by freeing the trailing pages, repeat — page conservation must hold
+    after every grow and every rollback, including with shared (incref'd)
+    and cache-donated prefixes in play, and the drained pool must be
+    fully allocatable (no leak across accept/reject cycles)."""
+    num_pages = data.draw(st.integers(6, 48))
+    alloc = RefCountedPageAllocator(num_pages, PS)
+    held: list[list[int]] = []
+    lens: list[int] = []  # committed token length per sequence
+    # admit a few sequences at their prompt lengths
+    for _ in range(data.draw(st.integers(1, 3))):
+        n_tok = data.draw(st.integers(1, 2 * PS))
+        need = alloc.pages_needed(n_tok)
+        if alloc.free_pages < need:
+            break
+        held.append(alloc.allocate(need))
+        lens.append(n_tok)
+    sharers: list[list[int]] = []  # extra holders pinning shared prefixes
+    for _ in range(data.draw(st.integers(1, 40))):
+        if not held:
+            break
+        op = data.draw(st.integers(0, 5))
+        i = data.draw(st.integers(0, len(held) - 1))
+        if op == 0:
+            # share + donate this sequence's prompt prefix (prefix cache)
+            k = data.draw(st.integers(1, len(held[i])))
+            alloc.incref(held[i][:k])
+            sharers.append(list(held[i][:k]))
+            for p in held[i][:k]:
+                alloc.mark_cached(p)
+        else:
+            # speculate: grow to cover k drafts, verify, roll back
+            k = data.draw(st.integers(1, 6))
+            grow = alloc.pages_to_cover(len(held[i]), lens[i] + k)
+            if grow > alloc.free_pages:
+                continue
+            if grow:
+                held[i].extend(alloc.allocate(grow))
+            alloc.check_invariants(held + sharers)
+            accepted = data.draw(st.integers(0, k))
+            lens[i] += accepted + 1  # accepted drafts + bonus token
+            target = alloc.pages_needed(lens[i])
+            if len(held[i]) > target:
+                alloc.free(held[i][target:])
+                del held[i][target:]
+        alloc.check_invariants(held + sharers)
+    for seq in held + sharers:
+        alloc.free(seq)
+    alloc.check_invariants([])
+    assert alloc.free_pages == num_pages - 1
+
+
+def test_eviction_prefers_cold_pages_over_lru():
+    """Hit-count weighting: a page the prefix cache re-hit survives
+    colder pages even when those were parked more recently."""
+    alloc = RefCountedPageAllocator(4, PS)  # pages 1..3, no spare
+    evicted = []
+    alloc.on_evict = evicted.append
+    pages = alloc.allocate(3)
+    for p in pages:
+        alloc.mark_cached(p)
+        alloc.free([p])
+    # hit pages[0] twice, pages[1] once (resurrect + repark each time):
+    # LRU order becomes pages[2], pages[1], pages[0] but hit counts are
+    # pages[0]=2, pages[1]=1, pages[2]=0
+    for p, hits in ((pages[0], 2), (pages[1], 1)):
+        for _ in range(hits):
+            alloc.reuse([p])
+            alloc.free([p])
+    got = alloc.allocate(2)
+    assert evicted == [pages[2], pages[1]]  # coldest first, not pure LRU
+    assert set(got) == {pages[2], pages[1]}
+    alloc.check_invariants([got])
+
+
 def test_eviction_is_lru_and_notifies_once():
     alloc = RefCountedPageAllocator(4, PS)  # pages 1..3
     evicted = []

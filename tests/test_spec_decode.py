@@ -1,0 +1,228 @@
+"""Speculative decoding through the packed unified stream.
+
+The correctness anchor is DIFFERENTIAL: speculation changes only WHEN
+tokens are computed, never WHAT — greedy and stochastic runs must be
+token-for-token identical to the non-speculative packed path (the verify
+step samples each target at the exact RNG counter sequential decoding
+would have used).  On top of that: a steady spec step stays ONE device
+dispatch, rejected drafts roll their pages back exactly (the harness
+checks page conservation every step), and a repetitive trace must
+actually profit (accepted tokens/step > 1).
+
+Drafter unit tests (n-gram suffix table, adaptive-k controller) live
+here too — they run without a model.
+"""
+import numpy as np
+import pytest
+
+import serving_harness as H
+from repro.serving.draft import DraftController, Drafter, NGramTable, \
+    SpecConfig
+
+CYCLE = [5, 9, 17, 3]
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    return H.build_cfg_params()
+
+
+def _prompts(cfg, rng):
+    """Mixed trace: repetitive prompts (n-gram hits) + a random one."""
+    return [CYCLE * 6, (CYCLE * 5)[:18],
+            list(rng.integers(1, cfg.vocab_size, size=9))]
+
+
+# ---------------------------------------------------------------------------
+# drafter unit tests (no model)
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_table_proposes_cycle_continuation():
+    t = NGramTable(1, 3)
+    t.extend(CYCLE * 4)
+    assert t.propose(4) == CYCLE  # the cycle predicts itself
+    assert t.propose(2) == CYCLE[:2]
+
+
+def test_ngram_table_chains_over_constant_tail():
+    t = NGramTable(1, 3)
+    t.extend([1, 2, 3, 7, 7, 7])
+    # the only follower of 7 is 7 itself; the chained lookup fills k
+    assert t.propose(4) == [7, 7, 7, 7]
+
+
+def test_ngram_table_no_repeat_no_drafts():
+    t = NGramTable(1, 3)
+    t.extend([1, 2, 3, 4, 5])
+    assert t.propose(4) == []
+
+
+def test_ngram_table_incremental_equals_rebuilt():
+    toks = (CYCLE * 3) + [1, 2] + CYCLE + [7, 7]
+    inc = NGramTable(1, 3)
+    for i in range(0, len(toks), 3):
+        inc.extend(toks[i:i + 3])
+    full = NGramTable(1, 3)
+    full.extend(toks)
+    for k in (1, 3, 5):
+        assert inc.propose(k) == full.propose(k)
+
+
+def test_controller_adapts_k_from_accept_rate():
+    c = DraftController(SpecConfig(max_draft=4, low=0.3, high=0.6))
+    assert c.k == 4
+    for _ in range(8):  # sustained rejection shrinks toward 1
+        c.observe(proposed=4, accepted=0)
+    assert c.k == 1
+    for _ in range(16):  # sustained acceptance regrows, capped at max
+        c.observe(proposed=c.k, accepted=c.k)
+    assert c.k == 4
+    c.observe(proposed=0, accepted=0)  # no drafts scheduled: no update
+    assert c.k == 4
+
+
+def test_drafter_respects_token_budget_and_forget():
+    d = Drafter(SpecConfig(max_draft=4))
+
+    class Req:
+        req_id = 1
+        prompt = CYCLE * 4
+        output: list[int] = []
+        max_new_tokens = 3
+
+    # budget: at most max_new - emitted - 1 drafts are worth verifying
+    assert len(d.propose(Req())) <= 2
+    Req.output = [0, 0]
+    assert d.propose(Req()) == []  # 1 token left: bonus covers it
+    d.forget(1)
+    assert not d._tables
+
+
+# ---------------------------------------------------------------------------
+# engine differential tests
+# ---------------------------------------------------------------------------
+
+
+def test_spec_greedy_token_identical_and_faster(smollm):
+    cfg, params = smollm
+    rng = np.random.default_rng(0)
+    prompts = _prompts(cfg, rng)
+    base = H.run_requests(H.build_engine(cfg, params), prompts,
+                          max_new_tokens=16)
+    spec = H.run_requests(
+        H.build_engine(cfg, params, speculative=True, draft_k=4),
+        prompts, max_new_tokens=16)
+    H.assert_same_outputs(base, spec, label_a="baseline", label_b="spec")
+    eng = spec.engine
+    assert eng.spec_stats["proposed"] > 0, "drafter never proposed"
+    assert eng.spec_stats["accepted"] > 0, "no draft ever accepted"
+    # the repetitive trace must save whole steps, not just break even
+    assert spec.num_steps < base.num_steps, (spec.num_steps, base.num_steps)
+
+
+def test_spec_one_dispatch_per_step(smollm):
+    cfg, params = smollm
+    spec = H.run_requests(
+        H.build_engine(cfg, params, speculative=True, draft_k=4),
+        [CYCLE * 6, (CYCLE * 5)[:18]], max_new_tokens=16)
+    eng = spec.engine
+    assert eng.spec_stats["steps"] > 0
+    # verify+accept+sample fused into the packed launch: exactly one
+    # device dispatch per engine step, all through the unified executable
+    assert dict(eng.device_calls) == {"unified": spec.num_steps}
+
+
+def test_spec_accepted_tokens_per_step_above_one(smollm):
+    cfg, params = smollm
+    spec = H.run_requests(
+        H.build_engine(cfg, params, speculative=True, draft_k=4),
+        [CYCLE * 6, (CYCLE * 5)[:18]], max_new_tokens=16)
+    st = spec.engine.spec_stats
+    assert st["accepted"] / spec.num_steps > 1.0, (st, spec.num_steps)
+    assert st["accepted"] <= st["proposed"]
+    # emitted = accepted + one bonus per spec row
+    assert st["accepted"] < st["emitted"] <= st["accepted"] + \
+        st["steps"] * spec.engine.max_seqs
+
+
+def test_spec_stochastic_token_identical(smollm):
+    """Exactness beyond greedy: the verify step consumes the same RNG
+    counters sequential decoding would, so temperature/top-k sampling is
+    reproduced bit-for-bit too."""
+    cfg, params = smollm
+    prompts = [CYCLE * 6, (CYCLE * 5)[:18]]
+    kw = dict(max_new_tokens=12, temperature=0.8, top_k=20, seed=7)
+    base = H.run_requests(H.build_engine(cfg, params), prompts, **kw)
+    spec = H.run_requests(
+        H.build_engine(cfg, params, speculative=True, draft_k=4),
+        prompts, **kw)
+    H.assert_same_outputs(base, spec, label_a="baseline", label_b="spec")
+    assert spec.engine.spec_stats["proposed"] > 0
+
+
+def test_spec_composes_with_chunked_prefill_and_prefix_cache(smollm):
+    cfg, params = smollm
+    rng = np.random.default_rng(3)
+    prompts = [CYCLE * 8, (CYCLE * 6)[:22],
+               list(rng.integers(1, cfg.vocab_size, size=9)), CYCLE * 3]
+    kw = dict(enable_chunked_prefill=True, max_prefill_tokens=16,
+              enable_prefix_caching=True)
+    base = H.run_requests(H.build_engine(cfg, params, **kw), prompts,
+                          max_new_tokens=14)
+    spec = H.run_requests(
+        H.build_engine(cfg, params, speculative=True, draft_k=4, **kw),
+        prompts, max_new_tokens=14)
+    H.assert_same_outputs(base, spec, label_a="baseline", label_b="spec")
+    assert spec.engine.spec_stats["accepted"] > 0
+
+
+def test_spec_rollback_under_page_pressure(smollm):
+    """A small pool forces speculation to grow and roll back page runs
+    constantly; the harness asserts page conservation after every step
+    and a leak-free drain."""
+    cfg, params = smollm
+    rng = np.random.default_rng(3)
+    prompts = [CYCLE * 8, (CYCLE * 6)[:22],
+               list(rng.integers(1, cfg.vocab_size, size=9)), CYCLE * 3]
+    base = H.run_requests(
+        H.build_engine(cfg, params, num_pages=24, max_seqs=4), prompts,
+        max_new_tokens=14)
+    spec = H.run_requests(
+        H.build_engine(cfg, params, num_pages=24, max_seqs=4,
+                       speculative=True, draft_k=4),
+        prompts, max_new_tokens=14)
+    H.assert_same_outputs(base, spec, label_a="baseline", label_b="spec")
+    assert spec.engine.spec_stats["accepted"] > 0
+
+
+def test_spec_telemetry_counters_match_engine(smollm):
+    from repro.obs import Telemetry
+    cfg, params = smollm
+    tel = Telemetry()
+    spec = H.run_requests(
+        H.build_engine(cfg, params, speculative=True, draft_k=4,
+                       telemetry=tel),
+        [CYCLE * 6, (CYCLE * 5)[:18]], max_new_tokens=16)
+    st = spec.engine.spec_stats
+    m = tel.metrics
+    for kind in ("proposed", "accepted", "emitted"):
+        assert m.value("repro_spec_tokens_total", kind=kind) == st[kind]
+    rate = m.value("repro_spec_accept_rate")
+    assert 0.0 <= rate <= 1.0
+    H.assert_telemetry_consistent(spec)
+
+
+def test_spec_profile_carries_spec_tokens_dimension(smollm):
+    """The autotune surface sees speculation: spec steps dispatch with a
+    pow2-bucketed `spec_tokens` in their BatchProfile (and non-spec steps
+    keep 0, so tuned trees fit on mixed traffic can split the two)."""
+    from repro.core.attention.heuristics import BatchProfile
+    import dataclasses
+    fields = [f.name for f in dataclasses.fields(BatchProfile)]
+    assert "spec_tokens" in fields
+    assert fields[-1] == "tp", "tp must stay last (astuple serialization)"
+    cfg, params = smollm
+    eng = H.build_engine(cfg, params, speculative=True, draft_k=4)
+    spec = H.run_requests(eng, [CYCLE * 6], max_new_tokens=12)
+    assert spec.engine.spec_stats["steps"] > 0
